@@ -1,0 +1,47 @@
+"""Paper Fig. 7/8: accuracy / bits-per-parameter / run-time proxy for each
+hardware design point: FP32, U4, U2, P4, P8, P45.
+
+Run-time proxy: inference on CPUs/TPUs in this regime is weight-bytes
+bound, so relative speedup is reported as bytes(U4)/bytes(config) — the
+same memory-roofline argument the paper's GEM5 numbers follow (§V-D); the
+dry-run roofline (EXPERIMENTS.md §Roofline) carries the per-arch TPU
+version of this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.qtypes import FP32, P4, P8, P45, U2, U4
+from . import _common
+
+LAM = 2e-2   # benchmark-scale bit-penalty (paper's 1e-7 is epoch-scale)
+
+POINTS = [("fp32", FP32, False), ("u4", U4, False), ("u2", U2, False),
+          ("p4", P4, True), ("p8", P8, True), ("p45", P45, True)]
+
+
+def run(steps=None):
+    t = steps or _common.BENCH_STEPS
+    rows = []
+    for name, qcfg, two_phase in POINTS:
+        qcfg = dataclasses.replace(qcfg, lam=LAM)
+        r = _common.train_cnn(qcfg, t1=t if two_phase else 0, t2=2 * t)
+        rows.append((name, r))
+    u4_bpp = dict((n, r["bpp"]) for n, r in rows)["u4"]
+    for name, r in rows:
+        r["speedup_proxy_vs_u4"] = u4_bpp / r["bpp"] if r["bpp"] else 0.0
+    return rows
+
+
+def main(steps=None):
+    rows, us = _common.timed(run, steps)
+    for name, r in rows:
+        _common.csv_row(
+            f"fig7.{name}", us / len(rows),
+            f"accuracy={r['accuracy']:.4f}|bpp={r['bpp']:.3f}"
+            f"|speedup_vs_u4={r['speedup_proxy_vs_u4']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 9: per-layer average bits-per-parameter after Phase I +
+PatternMatch (later layers quantize lower — more channels, less
+per-channel information)."""
+from __future__ import annotations
+
+import numpy as np
+
+import dataclasses
+
+from repro.core.qtypes import P45
+from . import _common
+
+
+def run(steps=None):
+    t = steps or _common.BENCH_STEPS
+    r = _common.train_cnn(dataclasses.replace(P45, lam=2e-2), t1=t, t2=2 * t)
+    layers = []
+    if r["report"]:
+        for i, lay in enumerate(r["report"]["layers"]):
+            layers.append((f"layer{i}", lay["bpp"], lay["vectors"]))
+    return layers, r
+
+
+def main(steps=None):
+    (layers, r), us = _common.timed(run, steps)
+    for name, bpp, vecs in layers:
+        _common.csv_row(f"fig9.{name}", us / max(len(layers), 1),
+                        f"bpp={bpp:.3f}|vectors={vecs}")
+    return layers
+
+
+if __name__ == "__main__":
+    main()

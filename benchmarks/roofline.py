@@ -1,0 +1,116 @@
+"""Roofline report over the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh):
+    compute term    = corrected dot FLOPs / (197 TFLOP/s)      [per chip]
+    memory term     = corrected bytes      / (819 GB/s)
+    collective term = corrected coll bytes / (50 GB/s/link)
+(all per-device — the HLO is post-SPMD), dominant term, MODEL_FLOPS/HLO
+ratio, and the MFU bound implied by the dominant term.
+
+"corrected" = trip-count-corrected per launch/hlo_cost.py (XLA's aggregate
+cost_analysis counts scan bodies once; we re-walk the call graph with
+known_trip_count).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (conservative single-link)
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(cell: Dict) -> float:
+    """Analytic useful FLOPs per device: 6*N_active*tokens (train) or
+    2*N_active*tokens (inference)."""
+    n = cell["active_params"]
+    toks = SHAPE_TOKENS[cell["shape"]]
+    mult = 6.0 if cell["kind"] == "train" else 2.0
+    return mult * n * toks / cell["devices"]
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if "skipped" in cell or "error" in cell:
+        return None
+    c = cell["corrected"]
+    t_compute = c["dot_flops"] / PEAK_FLOPS
+    t_mem = c["bytes_accessed"] / HBM_BW
+    t_coll = sum(c["collective_bytes"].values()) / ICI_BW
+    terms = {"compute": t_compute, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    mf = model_flops(cell)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_ratio": mf / max(c["dot_flops"], 1.0),
+        "mfu_bound": (mf / PEAK_FLOPS) / max(bound, 1e-12),
+        "hbm_gib": cell["memory"].get("argument_size_in_bytes", 0) / 2**30
+        + cell["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        "fallbacks": len(cell.get("fallbacks", [])),
+    }
+
+
+def load(dirname: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        cell = json.load(open(f))
+        r = roofline_row(cell)
+        if r is None:
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": cell["mesh"],
+                         "skipped": cell.get("skipped",
+                                             "error")[:40]})
+        else:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dom':>6s} {'MFUbnd':>7s} "
+           f"{'6ND/HLO':>8s} {'HBM GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                         f"SKIP: {r['skipped']}")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']:10.4g} {r['t_memory_s']:10.4g} "
+            f"{r['t_collective_s']:10.4g} {r['dominant'][:6]:>6s} "
+            f"{r['mfu_bound']:7.3f} {r['model_flops_ratio']:8.3f} "
+            f"{r['hbm_gib']:8.2f}")
+    return "\n".join(lines)
+
+
+def main(dirname: str = "results/dryrun"):
+    from . import _common
+    rows = load(dirname)
+    for r in rows:
+        if "skipped" in r:
+            _common.csv_row(
+                f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+                f"skipped={r['skipped']}")
+        else:
+            _common.csv_row(
+                f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+                f"t_compute={r['t_compute_s']:.4g}"
+                f"|t_memory={r['t_memory_s']:.4g}"
+                f"|t_coll={r['t_collective_s']:.4g}"
+                f"|dominant={r['dominant']}"
+                f"|mfu_bound={r['mfu_bound']:.3f}"
+                f"|model_flops_ratio={r['model_flops_ratio']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(format_table(load()))

@@ -1,0 +1,69 @@
+"""Paper §V-D run-time analog at the kernel level: bytes moved and MXU
+FLOPs per GEMM as a function of the precision pattern — the quantities the
+TPU roofline converts into time. Uses the real packed layouts (and checks
+the Pallas kernel agrees with its oracle on one spot shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack, smol
+from repro.core.qtypes import QuantConfig
+from repro.kernels import ops, ref
+from . import _common
+
+M, K, N = 64, 2048, 2048
+
+
+def gemm_bytes(mix):
+    qcfg = QuantConfig(mode="serve", mix=mix)
+    k4, k2, k1 = qcfg.segments(K)
+    w_bytes = k4 * N // 2 + k2 * N // 4 + k1 * N // 8
+    scales = (K // 16) * 4
+    act_bytes = M * K * 2          # bf16 activations in
+    out_bytes = M * N * 4
+    flops = 2 * M * K * N
+    return {"w_bytes": w_bytes + scales, "act_bytes": act_bytes,
+            "out_bytes": out_bytes, "flops": flops,
+            "arith_intensity": flops / (w_bytes + scales + act_bytes
+                                        + out_bytes)}
+
+
+def run():
+    rows = []
+    bf16 = {"w_bytes": K * N * 2, "act_bytes": M * K * 2,
+            "out_bytes": M * N * 4, "flops": 2 * M * K * N}
+    bf16["arith_intensity"] = bf16["flops"] / (
+        bf16["w_bytes"] + bf16["act_bytes"] + bf16["out_bytes"])
+    rows.append(("bf16", bf16))
+    for name, mix in [("u4", (1.0, 0, 0)), ("u2", (0, 1.0, 0)),
+                      ("u1", (0, 0, 1.0)), ("p4_mix", (0.5, 0.375, 0.125))]:
+        rows.append((name, gemm_bytes(mix)))
+    base = rows[0][1]["w_bytes"]
+    for name, r in rows:
+        r["w_compression"] = base / r["w_bytes"]
+
+    # spot-check kernel vs oracle at this shape (correctness anchor)
+    key = jax.random.PRNGKey(0)
+    u = jax.random.randint(key, (256, 128), 0, 16).astype(jnp.uint8)
+    wp = pack.pack_codes(u, 4)
+    x = jax.random.normal(key, (8, 256))
+    got = ops.packed_segment_matmul(x, wp, None, p=4, interpret=True)
+    want = ref.packed_segment_matmul_ref(x, wp, None, 4)
+    err = float(jnp.max(jnp.abs(got - want)))
+    rows.append(("kernel_spot_check", {"max_err": err}))
+    return rows
+
+
+def main():
+    rows, us = _common.timed(run)
+    for name, r in rows:
+        _common.csv_row(
+            f"runtime_proxy.{name}", us / len(rows),
+            "|".join(f"{k}={v:.4g}" for k, v in r.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Quickstart: the SONIQ pipeline on one linear layer, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Phase I  — noise-injected precision search (trainable s per 16-channel
+              group, bit-count regularizer).
+2. Boundary — Problem-1 pattern solve + PatternMatch + precision freeze.
+3. Phase II — STE fine-tuning on the frozen {1,2,4}-bit SMOL grid.
+4. Deploy   — channel reorder + bit-pack; packed matmul == QAT matmul.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                       # noqa: E402
+import jax.numpy as jnp                          # noqa: E402
+import numpy as np                               # noqa: E402
+
+from repro.core import QuantConfig, noise, schedule, smol  # noqa: E402
+from repro.kernels import ops                    # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+K, N, BATCH = 256, 128, 64
+
+
+def main():
+    qcfg = QuantConfig(mode="noise", lam=2e-2)
+    # Teacher with *heterogeneous channel importance* — the structure SONIQ
+    # exists to find: the first quarter of input channels carry most of the
+    # signal, the rest progressively less.
+    importance = jnp.concatenate([
+        jnp.full((K // 4,), 1.0), jnp.full((K // 4,), 0.25),
+        jnp.full((K // 4,), 0.05), jnp.full((K // 4,), 0.01)])
+    w_true = jax.random.normal(jax.random.PRNGKey(9), (K, N)) * 0.2 \
+        * importance[:, None]
+
+    def draw(i):   # fresh data every step (stream; keeps the problem
+        xi = jax.random.normal(jax.random.fold_in(KEY, 10_000 + i),
+                               (BATCH, K))        # fully determined)
+        return xi, xi @ w_true
+
+    params = smol.linear_init(KEY, K, N, qcfg)
+    # Start from the pretrained weights (the realistic QAT workflow — the
+    # paper fine-tunes trained networks; a from-scratch co-train needs the
+    # paper's epoch-scale Phase I).
+    params["w"] = w_true + 0.01 * jax.random.normal(KEY, (K, N))
+    print(f"Phase I: {params['s'].shape[0]} channel groups at "
+          f"s_init={float(params['s'][0]):.3f} "
+          f"(sigma={float(noise.sigma(params['s'][0])):.4f} = 2^-3)")
+
+    @jax.jit
+    def step(params, lr, rng, xi, yi):
+        def loss(p):
+            pred = smol.linear_apply(p, xi, qcfg, rng)
+            return jnp.mean((pred - yi) ** 2) \
+                + qcfg.lam * noise.bit_penalty(p["s"])
+        g = jax.grad(loss)(params)
+        # s gets its own (faster) schedule — paper Phase I runs for epochs.
+        return {"w": params["w"] - lr * g["w"],
+                "s": params["s"] - 8 * lr * g["s"]}
+
+    for i in range(800):
+        xi, yi = draw(i)
+        params = step(params, 0.03, jax.random.fold_in(KEY, i), xi, yi)
+    x, y = draw(999)   # eval batch
+
+    bits = np.asarray(noise.snap_124(noise.precision_from_s(params["s"])))
+    print(f"learned precisions: {dict(zip(*np.unique(bits, return_counts=True)))}")
+
+    # Boundary: Problem 1 + PatternMatch under the P4 hardware subset.
+    qat_params, report = schedule.pattern_match_params(
+        {"layer": jax.device_get(params)}, qcfg)
+    print(f"PatternMatch: {report['layers'][0]['vectors']} vectors, "
+          f"bpp={report['layers'][0]['bpp']:.2f} "
+          f"(patterns: {report['allowed'][:4]})")
+
+    # Phase II: STE fine-tune (a few steps).
+    qcfg2 = QuantConfig(mode="qat")
+    p2 = qat_params["layer"]
+
+    @jax.jit
+    def step2(p):
+        def loss(pp):
+            return jnp.mean((smol.linear_apply(pp, x, qcfg2) - y) ** 2)
+        g = jax.grad(loss, allow_int=True)(p)
+        return {k: (v - 0.01 * g[k] if k == "w" else v) for k, v in p.items()}
+
+    for _ in range(100):
+        p2 = step2(p2)
+
+    # Deploy: pack + run the Pallas kernel path.
+    sp = smol.serve_params_from_qat(jax.device_get(p2), qcfg2)
+    y_kernel = ops.packed_matmul(x, sp, interpret=True)
+    y_qat = smol.linear_apply(p2, x, qcfg2)
+    err = float(jnp.max(jnp.abs(y_kernel - y_qat)))
+    nbytes = sum(int(np.prod(sp[k].shape)) for k in ("w4", "w2", "w1"))
+    print(f"packed size: {nbytes} bytes vs fp32 {K*N*4} "
+          f"({K*N*4/nbytes:.1f}x compression)")
+    print(f"kernel vs QAT max err: {err:.2e}")
+    rel = float(jnp.linalg.norm(y_qat - y) / jnp.linalg.norm(y))
+    print(f"task relative error at deploy: {rel:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""SONIQ/SySMOL on TPU: ultra-low fine-grained mixed-precision training and
+serving in JAX. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Architecture configs: 10 assigned archs + the paper's own CNN family."""
+from .base import ArchConfig
+from .registry import get_config, list_archs
+
+# Import for registration side effects.
+from . import (starcoder2_7b, h2o_danube_1_8b, deepseek_67b,
+               mistral_large_123b, deepseek_moe_16b, mixtral_8x22b,
+               qwen2_vl_72b, mamba2_2_7b, jamba_1_5_large_398b,
+               whisper_medium)
+
+ASSIGNED = [
+    "starcoder2-7b", "h2o-danube-1.8b", "deepseek-67b", "mistral-large-123b",
+    "deepseek-moe-16b", "mixtral-8x22b", "qwen2-vl-72b", "mamba2-2.7b",
+    "jamba-1.5-large-398b", "whisper-medium",
+]
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "ASSIGNED"]

@@ -1,0 +1,202 @@
+"""ArchConfig: one dataclass describes every assigned architecture.
+
+`layer_plan()` yields homogeneous scan groups; `reduced()` returns a tiny
+same-family config for CPU smoke tests; `param_count()` /
+`active_param_count()` feed MODEL_FLOPS = 6*N*D in the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.qtypes import QuantConfig
+
+Plan = Tuple[Tuple[str, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | vlm | ssm | hybrid | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # attention
+    rope_theta: float = 1e4
+    window: Optional[int] = None     # sliding-window attention
+    mrope_sections: Optional[Tuple[int, int, int]] = None   # qwen2-vl
+    attn_bias: bool = False
+    mlp_act: str = "swiglu"
+    norm: str = "rms"                # rms | ln
+
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    first_dense_layers: int = 0
+    dense_d_ff: int = 0              # d_ff of the first dense layers
+    moe_every: int = 1               # MoE at layers where i % moe_every == moe_every-1
+
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0              # hybrid: 1 attn per attn_every layers
+    attn_offset: int = 3
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    frontend: Optional[str] = None   # audio_stub | vision_stub
+    frontend_dim: int = 0
+
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"          # compute dtype
+    param_dtype: str = "float32"
+    quant: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig(mode="qat"))
+    remat: str = "full"              # full | dots | none
+    q_block: int = 512               # chunked-attention query block
+    source: str = ""                 # provenance note
+
+    # ------------------------------------------------------------ sizes ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def layer_plan(self) -> Plan:
+        l = self.num_layers
+        if self.family == "audio":
+            return (("dec", l),)
+        if self.family == "ssm":
+            return (("mamba", l),)
+        if self.family == "hybrid":
+            assert l % self.attn_every == 0
+            return (("hybrid_unit", l // self.attn_every),)
+        if self.num_experts:
+            plan = []
+            if self.first_dense_layers:
+                plan.append(("attn_mlp", self.first_dense_layers))
+            plan.append(("attn_moe", l - self.first_dense_layers))
+            return tuple(plan)
+        return (("attn_mlp", l),)
+
+    def hybrid_unit_kinds(self) -> Tuple[str, ...]:
+        """Per-sublayer kinds of one hybrid (Jamba) unit: mixer x ffn."""
+        kinds = []
+        for i in range(self.attn_every):
+            mixer = "attn" if i == self.attn_offset else "mamba"
+            ffn = "moe" if (self.num_experts and
+                            i % self.moe_every == self.moe_every - 1) else "mlp"
+            kinds.append(f"{mixer}_{ffn}")
+        return tuple(kinds)
+
+    # ----------------------------------------------------- param counts ----
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        return d * hd * (self.num_heads * 2 + self.num_kv_heads * 2)
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mult = 3 if self.mlp_act == "swiglu" else 2
+        return mult * self.d_model * d_ff
+
+    def _mamba_params(self) -> int:
+        d, di, n = self.d_model, self.d_inner, self.ssm_state
+        h = di // 64
+        return d * (2 * di + 2 * n + h) + di * d + 4 * (di + 2 * n)
+
+    def _moe_params(self) -> int:
+        p = self.num_experts * self._mlp_params(self.d_ff) \
+            + self.d_model * self.num_experts
+        if self.num_shared_experts:
+            p += self._mlp_params(self.d_ff * self.num_shared_experts)
+        return p
+
+    def _moe_active(self) -> int:
+        p = self.top_k * self._mlp_params(self.d_ff) \
+            + self.d_model * self.num_experts
+        if self.num_shared_experts:
+            p += self._mlp_params(self.d_ff * self.num_shared_experts)
+        return p
+
+    def _count(self, active: bool) -> int:
+        total = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            total *= 2
+        enc = self.encoder_layers
+        if enc:
+            total += enc * (self._attn_params() + self._mlp_params(self.d_ff))
+        for kind, n in self.layer_plan():
+            if kind == "hybrid_unit":
+                for sub in self.hybrid_unit_kinds():
+                    mixer, ffn = sub.split("_")
+                    per = (self._attn_params() if mixer == "attn"
+                           else self._mamba_params())
+                    if ffn == "moe":
+                        per += self._moe_active() if active else self._moe_params()
+                    else:
+                        per += self._mlp_params(self.d_ff)
+                    total += n * per
+                continue
+            per = 0
+            if "attn" in kind or kind == "dec":
+                per += self._attn_params()
+                if kind == "dec":
+                    per += self._attn_params()      # cross attention
+            if "mamba" in kind:
+                per += self._mamba_params()
+            if "moe" in kind:
+                per += self._moe_active() if active else self._moe_params()
+            elif "mlp" in kind or kind == "dec":
+                dff = self.d_ff
+                if kind == "attn_mlp" and self.first_dense_layers:
+                    dff = self.dense_d_ff or self.d_ff
+                per += self._mlp_params(dff)
+            total += n * per
+        return total
+
+    def param_count(self) -> int:
+        return self._count(active=False)
+
+    def active_param_count(self) -> int:
+        return self._count(active=True)
+
+    # ---------------------------------------------------------- reduced ----
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 4 if self.family != "hybrid"
+                           else self.attn_every),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2),
+            d_ff=256,
+            vocab_size=256,
+            head_dim=32,
+            window=min(self.window, 64) if self.window else None,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            first_dense_layers=min(self.first_dense_layers, 1),
+            dense_d_ff=256 if self.dense_d_ff else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_chunk=32,
+            encoder_layers=min(self.encoder_layers, 2),
+            frontend_dim=min(self.frontend_dim, 16) if self.frontend_dim else 0,
+            dtype="float32",
+            param_dtype="float32",
+            q_block=64,
+            name=self.name + "-reduced",
+        )
+        if self.mrope_sections:
+            small["mrope_sections"] = (8, 4, 4)     # sums to head_dim/2 = 16
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,108 @@
+"""Phase I of SONIQ: noise-injected precision search (paper Alg. 1/2).
+
+Per (layer, input-channel-group) a trainable logit ``s`` parameterizes the
+perturbation scale sigma(s) = 1/(1+e^{-s}).  sigma(s) equals the worst-case
+round-off 2^(1-p) of a p-bit SMOL number, so
+    bits(s) = 1 + log2(1 + e^{-s})
+is a differentiable bit count and the paper's regularizer
+    lambda * || log2(1 + e^{-s}) ||_1  ==  lambda * sum(bits(s) - 1).
+
+System-aware variant (Alg. 2): one s per *input-channel group* shared by the
+weights and the activations computed against them (Obs. 3), precisions
+snapped to {1,2,4} (Obs. 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .qtypes import GROUP_SIZE
+
+
+def s_init(p_init: int) -> float:
+    """s_init = -ln(2^(p-1) - 1); for p=1 the exact value is +inf — we use a
+    large finite logit (sigma within 1e-3 of 1)."""
+    if p_init <= 1:
+        return 8.0
+    return float(-np.log(2.0 ** (p_init - 1) - 1.0))
+
+
+def init_s(num_groups: int, p_init: int = 4) -> jnp.ndarray:
+    return jnp.full((num_groups,), s_init(p_init), jnp.float32)
+
+
+def sigma(s):
+    return jax.nn.sigmoid(jnp.asarray(s, jnp.float32))
+
+
+def bits_soft(s):
+    """Differentiable bit count 1 + log2(1 + e^{-s}) = 1 - log2(sigma(s))."""
+    s = jnp.asarray(s, jnp.float32)
+    # log(1 + e^{-s}) = softplus(-s), numerically stable.
+    return 1.0 + jax.nn.softplus(-s) / jnp.log(2.0)
+
+
+def bit_penalty(s):
+    """The paper's L1 regularizer  || log2(1+e^{-s}) ||_1  (per-array sum)."""
+    return jnp.sum(bits_soft(jnp.asarray(s)) - 1.0)
+
+
+def precision_from_s(s):
+    """Readout p = 1 + round(log2(1 + e^{-s})) (paper Alg. 1 line 9)."""
+    return 1.0 + jnp.round(bits_soft(s) - 1.0)
+
+
+def snap_124(p):
+    """Closest precision in {1, 2, 4}; ties round toward more bits (favors
+    accuracy — paper Alg. 2 line 11). Note the paper first rounds the raw
+    readout to an integer, so raw p in [2.5, 3) -> 3 -> snaps to 4: the
+    effective 4-bit band starts at raw 2.5."""
+    p = jnp.asarray(p, jnp.float32)
+    return jnp.where(p >= 2.5, 4.0, jnp.where(p >= 1.5, 2.0, 1.0))
+
+
+# Thresholds on s for the {4, 2, 1}-bit bands (inverse of the round-then-snap
+# readout; used by PatternMatch, paper Alg. 3). s < T_4B -> 4 bits;
+# s < T_2B -> 2 bits; else 1 bit.
+T_4B = float(-np.log(2.0 ** 1.5 - 1.0))  # raw p = 2.5
+T_2B = float(-np.log(np.sqrt(2) - 1.0))  # raw p = 1.5
+# Representative logits assigned by PatternMatch (s_init of each precision).
+S_4B, S_2B, S_1B = s_init(4), s_init(2), s_init(1)
+
+
+def inject_weight_noise(w, s, key, group_size: int = GROUP_SIZE):
+    """w + sigma(s) * eps,  eps ~ U(+-1), sigma broadcast per K-group; then
+    clip to +-(2 - sigma(s)) (paper Alg. 1 lines 4-7).
+
+    w: [K, ...] with K = group_size * len(s).
+    """
+    w = jnp.asarray(w)
+    k = w.shape[0]
+    sig = jnp.repeat(sigma(s), group_size, total_repeat_length=k)
+    sig = sig.reshape((k,) + (1,) * (w.ndim - 1)).astype(w.dtype)
+    eps = jax.random.uniform(key, w.shape, w.dtype, -1.0, 1.0)
+    w_noisy = w + sig * eps
+    lim = (2.0 - sig).astype(w.dtype)
+    return jnp.clip(w_noisy, -lim, lim)
+
+
+def inject_act_noise(x, s, key, scale=1.0, group_size: int = GROUP_SIZE):
+    """Same perturbation applied to the activations that multiply those
+    channels (paper Alg. 2 line 6), along the last dim of x. ``scale``
+    matches the activation quantization scale so the noise magnitude is in
+    activation units."""
+    x = jnp.asarray(x)
+    k = x.shape[-1]
+    sig = jnp.repeat(sigma(s), group_size, total_repeat_length=k).astype(x.dtype)
+    eps = jax.random.uniform(key, x.shape, x.dtype, -1.0, 1.0)
+    return x + jnp.asarray(scale, x.dtype) * sig * eps
+
+
+def clip_weights(w, s, group_size: int = GROUP_SIZE):
+    """Projection step after the optimizer update (paper Alg. 1 line 7):
+    clip w to +-(2 - sigma(s))."""
+    k = w.shape[0]
+    sig = jnp.repeat(sigma(s), group_size, total_repeat_length=k)
+    lim = (2.0 - sig).reshape((k,) + (1,) * (w.ndim - 1)).astype(w.dtype)
+    return jnp.clip(w, -lim, lim)

@@ -1,0 +1,118 @@
+"""Bit-packing of SMOL integer codes into int8 carrier words.
+
+TPU adaptation of the paper's vector-register data layout: a p-bit code
+stream along the K (input-channel) axis is packed little-endian into uint8
+bytes (8/p codes per byte). Weights [K, N] pack along K to [K*p//8, N] so the
+packed byte stream for one output column is contiguous in the K-minor layout
+the matmul kernel consumes.
+
+Mixed precision uses the segment layout [K4 | K2 | K1] (channels already
+reordered so same-precision runs are contiguous — paper Obs. 4): three packed
+buffers + the (K4, K2, K1) metadata triple (3 ints per layer, paper Obs. 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+
+
+def pack_codes(u, p: int):
+    """Pack unsigned p-bit codes along axis 0. u: [K, ...] -> [K*p//8, ...]."""
+    assert p in (1, 2, 4), p
+    vpb = 8 // p                      # values per byte
+    k = u.shape[0]
+    assert k % vpb == 0, (k, p)
+    u = jnp.asarray(u, jnp.uint8)
+    u = u.reshape((k // vpb, vpb) + u.shape[1:])
+    out = jnp.zeros(u.shape[:1] + u.shape[2:], jnp.uint8)
+    for j in range(vpb):
+        out = out | (u[:, j] << (p * j))
+    return out
+
+
+def unpack_codes(b, p: int, k: int):
+    """Inverse of pack_codes. b: [K*p//8, ...] -> [K, ...] uint8 codes."""
+    assert p in (1, 2, 4), p
+    vpb = 8 // p
+    b = jnp.asarray(b, jnp.uint8)
+    parts = [(b >> (p * j)) & ((1 << p) - 1) for j in range(vpb)]
+    u = jnp.stack(parts, axis=1)      # [K//vpb, vpb, ...]
+    return u.reshape((k,) + b.shape[1:])
+
+
+def quantize_pack_weight(w, pbits, scale=None, group_size=16) -> Dict:
+    """Quantize a [K, N] weight whose K-groups carry precisions ``pbits``
+    (values in {1,2,4}, already *sorted descending* / segment-contiguous) and
+    bit-pack each uniform-precision segment.
+
+    Returns dict with packed buffers w4/w2/w1 ([Kp*p//8, N] uint8), the
+    segment triple, and per-group scales (or None).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    k, n = w.shape
+    pbits = np.asarray(pbits)
+    assert pbits.ndim == 1 and pbits.shape[0] == k // group_size
+    # Verify segment-contiguity (4s, then 2s, then 1s).
+    order = {4: 0, 2: 1, 1: 2}
+    ranks = np.array([order[int(p)] for p in pbits])
+    assert np.all(np.diff(ranks) >= 0), "pbits must be sorted 4 -> 2 -> 1"
+
+    k4 = int((pbits == 4).sum()) * group_size
+    k2 = int((pbits == 2).sum()) * group_size
+    k1 = int((pbits == 1).sum()) * group_size
+
+    if scale is None:
+        s_full = jnp.ones((k,), jnp.float32)
+        scales = None
+    else:
+        scales = jnp.asarray(scale, jnp.float32)
+        s_full = jnp.repeat(scales, group_size, total_repeat_length=k)
+
+    ws = w / s_full[:, None]
+    out = {"segments": (k4, k2, k1), "scales": scales, "n": n,
+           "group_size": group_size}
+    off = 0
+    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+        seg = ws[off:off + kp]
+        u = quant.quantize_to_int(seg, p).astype(jnp.uint8)
+        out[name] = (pack_codes(u, p) if kp else
+                     jnp.zeros((0, n), jnp.uint8))
+        off += kp
+    return out
+
+
+def unpack_dequantize_weight(packed: Dict):
+    """Reference inverse: reconstruct the dequantized [K, N] fp32 weight."""
+    k4, k2, k1 = packed["segments"]
+    n = packed["n"]
+    parts = []
+    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+        if kp == 0:
+            continue
+        u = unpack_codes(packed[name], p, kp)
+        parts.append(quant.dequantize_int(u, p))
+    w = jnp.concatenate(parts, axis=0) if parts else jnp.zeros((0, n))
+    if packed["scales"] is not None:
+        g = packed["group_size"]
+        s_full = jnp.repeat(packed["scales"], g,
+                            total_repeat_length=k4 + k2 + k1)
+        w = w * s_full[:, None]
+    return w
+
+
+def packed_nbytes(packed: Dict) -> int:
+    """Actual storage bytes of the packed weight (the paper's size metric)."""
+    total = sum(int(np.prod(packed[n].shape)) for n in ("w4", "w2", "w1"))
+    if packed["scales"] is not None:
+        total += int(np.prod(packed["scales"].shape)) * 4
+    return total + 3 * 4  # + the 3-int segment metadata (paper Obs. 4)
+
+
+def bits_per_param(packed: Dict) -> float:
+    k4, k2, k1 = packed["segments"]
+    n = packed["n"]
+    return 8.0 * packed_nbytes(packed) / max((k4 + k2 + k1) * n, 1)

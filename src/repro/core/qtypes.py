@@ -1,0 +1,108 @@
+"""Configuration dataclasses for the SONIQ quantization stack.
+
+Terminology (see DESIGN.md §2):
+  * group        — 16 consecutive input channels; the minimum precision-control
+                   unit (the TPU analog of the paper's 16-bit SIMD lane).
+  * block        — 8 groups = 128 channels; one "vector" in the paper's sense
+                   (one TPU vreg lane row). A *pattern* assigns each of the 8
+                   groups in a block a precision from {1, 2, 4}.
+  * segment      — after PatternMatch + channel reordering, the K (input
+                   channel) dim of a weight splits into three contiguous runs
+                   [K4 | K2 | K1] of uniform precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+GROUP_SIZE = 16          # channels per precision group (paper Obs. 5)
+GROUPS_PER_BLOCK = 8     # groups per 128-channel block (paper's 128-bit vector)
+BLOCK_SIZE = GROUP_SIZE * GROUPS_PER_BLOCK
+ALLOWED_BITS = (1, 2, 4)  # paper Obs. 2
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How SONIQ is applied to the linear layers of a model."""
+
+    # "fp"    : no quantization (full-precision baseline)
+    # "noise" : Phase I  — noise-injected precision search (trainable s)
+    # "qat"   : Phase II — fixed per-group precisions, STE fine-tuning
+    # "serve" : deployment — packed low-bit weights, dequant-in-kernel
+    mode: str = "fp"
+
+    group_size: int = GROUP_SIZE
+    # Fraction of input-channel groups held at 4 / 2 / 1 bits. Used to size
+    # the static [K4|K2|K1] segments for "qat"/"serve" (the trained
+    # distribution replaces this at deploy time; the fractions give the
+    # dry-run its static shapes). Must sum to 1.
+    mix: Tuple[float, float, float] = (0.5, 0.375, 0.125)
+
+    # "none"       : paper-faithful — values live directly on the ±2 SMOL grid
+    # "per_group"  : one scale per 16-channel group on K (beyond-paper; needed
+    #                for LLM weight distributions)
+    scale_mode: str = "per_group"
+    # Quantize activations entering each quantized matmul to the same
+    # per-group precision (paper Obs. 3 "input-weight consistency").
+    quantize_activations: bool = True
+    # Dynamic abs-max scaling of activations (per tensor). Paper-faithful
+    # mode ("none") assumes pre-scaled activations in ±2.
+    act_scale_mode: str = "per_tensor"
+
+    # Phase-I hyperparameters.
+    p_init: int = 4
+    lam: float = 1e-7          # λ of the bit-count regularizer
+
+    # Number of hardware-supported patterns (paper's np design knob: 4/8/45).
+    num_patterns: int = 4
+
+    # Layers never quantized (paper excludes first/last in practice).
+    skip: Tuple[str, ...] = ("embed", "lm_head", "router", "frontend")
+
+    # Use Pallas kernels (True on TPU; the pure-jnp path is used for
+    # dry-run lowering and as the reference).
+    use_pallas: bool = False
+
+    # Weights arrive already fake-quantized (set by the hoisted-quantization
+    # train path: quantize once per step, not once per microbatch — §Perf).
+    prequantized: bool = False
+
+    def __post_init__(self):
+        assert self.mode in ("fp", "noise", "qat", "serve"), self.mode
+        assert self.scale_mode in ("none", "per_group"), self.scale_mode
+        assert self.act_scale_mode in ("none", "per_tensor"), self.act_scale_mode
+        assert abs(sum(self.mix) - 1.0) < 1e-6, self.mix
+        assert self.group_size % 2 == 0
+
+    def segments(self, k: int) -> Tuple[int, int, int]:
+        """Split ``k`` input channels into (K4, K2, K1) — contiguous runs of
+        uniform precision, each a multiple of ``group_size`` (and the total
+        exactly ``k``). Mirrors the paper's post-training channel reordering.
+        """
+        g = self.group_size
+        assert k % g == 0, f"K={k} not a multiple of group size {g}"
+        n_groups = k // g
+        g4 = int(round(self.mix[0] * n_groups))
+        g2 = int(round(self.mix[1] * n_groups))
+        g4 = min(g4, n_groups)
+        g2 = min(g2, n_groups - g4)
+        g1 = n_groups - g4 - g2
+        return g4 * g, g2 * g, g1 * g
+
+    def bits_per_param(self, k: Optional[int] = None) -> float:
+        """Average bits per parameter implied by the mix (ignoring metadata,
+        which is 3 ints per segment — paper Obs. 4)."""
+        if k is None:
+            f4, f2, f1 = self.mix
+            return 4 * f4 + 2 * f2 + 1 * f1
+        k4, k2, k1 = self.segments(k)
+        return (4 * k4 + 2 * k2 + 1 * k1) / k
+
+
+# Convenience presets matching the paper's design points (§V-A).
+FP32 = QuantConfig(mode="fp")
+U4 = QuantConfig(mode="qat", mix=(1.0, 0.0, 0.0))
+U2 = QuantConfig(mode="qat", mix=(0.0, 1.0, 0.0))
+P4 = QuantConfig(mode="qat", mix=(0.5, 0.375, 0.125), num_patterns=4)
+P8 = QuantConfig(mode="qat", mix=(0.5, 0.375, 0.125), num_patterns=8)
+P45 = QuantConfig(mode="qat", mix=(0.5, 0.375, 0.125), num_patterns=45)

@@ -1,0 +1,148 @@
+"""The SMOL/SONIQ quantization grid and straight-through fake-quantization.
+
+Grid (paper §II-B): an n-bit string b_1..b_n (MSB first) represents
+    v = sum_i (2 b_i - 1) * 2^(1-i)
+Equivalently, with u = unsigned integer value of the bits,
+    v = (2u - (2^n - 1)) * 2^(1-n)
+i.e. the odd multiples of 2^(1-n) in [-(2 - 2^(1-n)), +(2 - 2^(1-n))]:
+    n=1: {-1, +1}
+    n=2: {-1.5, -0.5, +0.5, +1.5}
+    n=4: {-1.875, ..., -0.125, +0.125, ..., +1.875}
+The grid is symmetric and zero-free; step 2^(2-n); max round-off 2^(1-n)
+(which is exactly the Phase-I noise scale sigma(s_init)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def smol_values(p: int) -> np.ndarray:
+    """All representable values of the p-bit SMOL grid, ascending."""
+    u = np.arange(2 ** p)
+    return (2 * u - (2 ** p - 1)) * 2.0 ** (1 - p)
+
+
+def grid_max(p) -> jnp.ndarray:
+    """Largest representable magnitude: 2 - 2^(1-p). Works on traced p."""
+    return 2.0 - jnp.exp2(1.0 - p)
+
+
+def quantize_to_int(x, p):
+    """x (already scaled into the +-2 range) -> unsigned int codes u.
+
+    Branchless in ``p`` (p may be a traced array broadcast against x).
+    """
+    p = jnp.asarray(p, jnp.float32)
+    h = jnp.exp2(1.0 - p)            # 2^(1-p): half-step == max error
+    two_p = 2.0 / h                  # 2^p
+    u = jnp.round((jnp.asarray(x, jnp.float32) / h + (two_p - 1.0)) / 2.0)
+    return jnp.clip(u, 0.0, two_p - 1.0)
+
+
+def dequantize_int(u, p):
+    """Unsigned codes u -> grid values, branchless in p."""
+    p = jnp.asarray(p, jnp.float32)
+    h = jnp.exp2(1.0 - p)
+    two_p = 2.0 / h
+    return (2.0 * jnp.asarray(u, jnp.float32) - (two_p - 1.0)) * h
+
+
+def snap_to_grid(x, p):
+    """Round x (scaled) to the nearest p-bit SMOL grid point (with clipping)."""
+    return dequantize_int(quantize_to_int(x, p), p)
+
+
+def _expand_groups(pbits, k, group_size):
+    """[K//G] per-group values -> [K] per-channel values."""
+    return jnp.repeat(jnp.asarray(pbits), group_size, axis=-1,
+                      total_repeat_length=k)
+
+
+# ---------------------------------------------------------------------------
+# Clipped straight-through fake quantization.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_quant(x, pbits, scale, group_size=16):
+    """Quantize-dequantize ``x`` along its last dim with per-group precisions.
+
+    x      : [..., K]
+    pbits  : [K // group_size] float/int in {1,2,4} (traced OK — branchless)
+    scale  : broadcastable against x after grouping; the per-group scale is
+             expanded along the last dim. Use scale=1.0 for the
+             paper-faithful no-scale grid.
+    """
+    y, _ = _fake_quant_fwd_impl(x, pbits, scale, group_size)
+    return y
+
+
+def _fake_quant_fwd_impl(x, pbits, scale, group_size):
+    k = x.shape[-1]
+    p = _expand_groups(pbits, k, group_size).astype(jnp.float32)
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim and s.shape[-1] == max(1, k // group_size) and k > s.shape[-1]:
+        s = _expand_groups(s, k, group_size)
+    xs = jnp.asarray(x, jnp.float32) / s
+    q = snap_to_grid(xs, p)
+    y = (q * s).astype(x.dtype)
+    in_range = (jnp.abs(xs) <= grid_max(p)).astype(x.dtype)
+    return y, in_range
+
+
+def _fake_quant_fwd(x, pbits, scale, group_size):
+    y, in_range = _fake_quant_fwd_impl(x, pbits, scale, group_size)
+    return y, (in_range, pbits, scale)
+
+
+def _fake_quant_bwd(group_size, res, g):
+    in_range, pbits, scale = res
+    # Clipped STE: pass gradient where |x/scale| is inside the grid range.
+    dx = g * in_range
+    return (dx, jnp.zeros_like(jnp.asarray(pbits, jnp.float32)),
+            jnp.zeros_like(jnp.asarray(scale, jnp.float32)))
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def _static_grid_max(p: int) -> float:
+    """grid_max for a static Python precision (trace-safe)."""
+    return 2.0 - 2.0 ** (1 - p)
+
+
+def abs_max_scale(x, axis=None, grid_p=4, eps=1e-6):
+    """Dynamic scale mapping abs-max of x to the top of the 4-bit grid.
+
+    stop_gradient'ed: scales are data statistics, not trained (beyond-paper
+    extension; see DESIGN.md §8).
+    """
+    m = jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)), axis=axis, keepdims=True)
+    return jax.lax.stop_gradient(jnp.maximum(m, eps)
+                                 / _static_grid_max(grid_p))
+
+
+def per_group_weight_scale(w, group_size=16, grid_p=4, eps=1e-6):
+    """Per-(16-channel K group) scale for a [K, ...] weight."""
+    k = w.shape[0]
+    wg = jnp.abs(jnp.asarray(w, jnp.float32)).reshape(k // group_size, group_size, -1)
+    m = jnp.max(wg, axis=(1, 2))
+    return jax.lax.stop_gradient(jnp.maximum(m, eps)
+                                 / _static_grid_max(grid_p))
+
+
+# ---------------------------------------------------------------------------
+# 16.6 fixed-point accumulator emulation (fidelity reference only — TPU uses
+# fp32; see DESIGN.md §2 "Assumptions that changed").
+# ---------------------------------------------------------------------------
+
+def to_fixed_16_6(x):
+    """Round to the paper's 16.6 fixed-point output format (10 int + 6 frac
+    bits, signed): values k/64, |v| <= (2^15 - 1)/64."""
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.round(x * 64.0)
+    q = jnp.clip(q, -(2 ** 15), 2 ** 15 - 1)
+    return q / 64.0

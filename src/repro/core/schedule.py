@@ -1,0 +1,100 @@
+"""Two-phase SONIQ training orchestration (paper Alg. 3).
+
+Phase I  (steps [0, t1)):   noise-injected precision search — mode="noise".
+Boundary (step t1):          per-layer Problem-1 solve + PatternMatch +
+                             channel-precision freeze — host-side transform
+                             of the parameter pytree ("noise" -> "qat").
+Phase II (steps [t1, t2)):   STE fine-tuning under frozen precisions.
+Deploy:                      "qat" -> "serve" packing (smol.serve_params_from_qat).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import noise as noise_lib
+from . import patterns as patterns_lib
+from . import smol
+from .qtypes import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSchedule:
+    t1: int          # Phase I steps (paper: T1 epochs)
+    t2: int          # total steps   (paper: T2 epochs)
+
+    def phase(self, step: int) -> str:
+        return "noise" if step < self.t1 else "qat"
+
+
+def _iter_s_layers(params, path=()):  # yield (path, dict) holding (w, s)
+    if isinstance(params, dict):
+        if "s" in params and "w" in params:
+            yield path, params
+        for k, v in params.items():
+            yield from _iter_s_layers(v, path + (k,))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            yield from _iter_s_layers(v, path + (i,))
+
+
+def collect_histograms(params, qcfg: QuantConfig) -> List[Tuple[int, int, int]]:
+    """Per-(layer, scan-slice) (N4, N2, N1) histograms from trained s."""
+    out = []
+    for _, node in _iter_s_layers(params):
+        s = np.asarray(node["s"])
+        g = smol.eff_group_size(node["w"].shape[-2], qcfg.group_size)
+        for s_row in s.reshape(-1, s.shape[-1]):
+            out.append(patterns_lib.histogram_from_s(s_row, g))
+    return out
+
+
+def pattern_match_params(params, qcfg: QuantConfig):
+    """The Phase I -> Phase II boundary transform (host-side, not jitted):
+
+      1. select the hardware pattern subset (paper §V-A / Table III),
+      2. per layer: Problem-1 solve under that subset, PatternMatch the s
+         vector, freeze per-group precisions,
+      3. swap each (w, s) SmolLinear into a (w, pbits) QAT layer.
+
+    Returns (new_params, report) where report carries solver stats.
+    """
+    allowed = patterns_lib.patterns_for(qcfg.num_patterns) \
+        if qcfg.num_patterns in patterns_lib.DESIGN_POINT_PATTERNS \
+        else patterns_lib.select_hardware_subset(
+            collect_histograms(params, qcfg), qcfg.num_patterns)
+
+    report: Dict = {"layers": [], "allowed": allowed}
+
+    def transform(node):
+        if not (isinstance(node, dict) and "s" in node and "w" in node):
+            return node
+        new = {k: v for k, v in node.items() if k != "s"}
+        s = np.asarray(node["s"])
+        g = smol.eff_group_size(node["w"].shape[-2], qcfg.group_size)
+        s2 = s.reshape(-1, s.shape[-1])
+        pb_rows = []
+        for s_row in s2:
+            n4, n2, n1 = patterns_lib.histogram_from_s(s_row, g)
+            sol = patterns_lib.solve_problem1(n4, n2, n1, allowed)
+            s_m = patterns_lib.pattern_match(s_row, sol, g)
+            pb = patterns_lib.precisions_from_matched_s(s_m)
+            pb_rows.append(pb)
+            report["layers"].append({
+                "hist": (n4, n2, n1), "vectors": sol.num_vectors,
+                "bpp": float((4 * (pb == 4).sum() + 2 * (pb == 2).sum()
+                              + (pb == 1).sum()) / pb.size)})
+        pbits = np.stack(pb_rows).reshape(s.shape).astype(np.int8)
+        new["pbits"] = jnp.asarray(pbits)
+        return new
+
+    return smol._tree_map_dicts(transform, params), report
+
+
+def average_bpp(report) -> float:
+    ls = report["layers"]
+    return float(np.mean([l["bpp"] for l in ls])) if ls else 0.0

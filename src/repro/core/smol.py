@@ -1,0 +1,331 @@
+"""SmolLinear — the universal quantized linear primitive.
+
+Every matmul in every model in this framework goes through ``linear_apply``.
+The ``QuantConfig.mode`` selects:
+
+  fp     y = x @ W                                  (baseline)
+  noise  Phase I:  y = (x + sx*sigma(s)*eps) @ clip(W + sw*sigma(s)*eps')
+  qat    Phase II: y = fq(x; p, sx) @ fq(W; p, sw)  (clipped STE)
+  serve  y = q(x) @ unpack_dequant(Wpacked)         (packed 1/2/4-bit carriers)
+
+with per-16-channel-group precisions p on the K (input/reduction) dim shared
+by weights and activations (paper Obs. 3), segments [K4|K2|K1] contiguous
+(paper Obs. 4), and fp32 accumulation (TPU adaptation of the paper's 16.6
+fixed-point accumulator).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import noise as noise_lib
+from . import pack as pack_lib
+from . import patterns as patterns_lib
+from . import quant
+from .qtypes import QuantConfig
+
+
+def num_groups(k: int, group_size: int) -> int:
+    if k < group_size:
+        return 1
+    assert k % group_size == 0, (k, group_size)
+    return k // group_size
+
+
+def eff_group_size(k: int, group_size: int) -> int:
+    return k if k < group_size else group_size
+
+
+def init_pbits_from_mix(k: int, qcfg: QuantConfig) -> np.ndarray:
+    """Static per-group precisions implementing qcfg.mix, sorted 4 -> 2 -> 1
+    (segment-contiguous). Replaced by trained precisions after Phase I."""
+    g = eff_group_size(k, qcfg.group_size)
+    n = num_groups(k, g)
+    g4 = int(round(qcfg.mix[0] * n))
+    g2 = int(round(qcfg.mix[1] * n))
+    g4 = min(g4, n)
+    g2 = min(g2, n - g4)
+    return np.array([4] * g4 + [2] * g2 + [1] * (n - g4 - g2), np.int8)
+
+
+def linear_init(key, k: int, n: int, qcfg: QuantConfig, *,
+                use_bias: bool = False, dtype=jnp.float32,
+                quantized: bool = True, scale: float = 1.0) -> Dict:
+    """Initialize SmolLinear params. ``quantized=False`` for skip layers."""
+    wkey, _ = jax.random.split(key)
+    std = scale / np.sqrt(k)
+    params: Dict = {"w": (jax.random.normal(wkey, (k, n), jnp.float32) * std
+                          ).astype(dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((n,), dtype)
+    if not quantized or qcfg.mode == "fp":
+        return params
+    g = eff_group_size(k, qcfg.group_size)
+    if qcfg.mode == "noise":
+        params["s"] = noise_lib.init_s(num_groups(k, g), qcfg.p_init)
+    elif qcfg.mode == "qat":
+        params["pbits"] = jnp.asarray(init_pbits_from_mix(k, qcfg))
+    elif qcfg.mode == "serve":
+        # Packed-buffer layout per qcfg.mix (zero codes; real deployments
+        # fill these via serve_params_from_qat). Gives eval_shape the exact
+        # serve pytree for the dry-run.
+        del params["w"]
+        k4, k2, k1 = qcfg.segments(k) if k >= qcfg.group_size else (k, 0, 0)
+        pbits = init_pbits_from_mix(k, qcfg)
+        params.update({
+            "w4": jnp.zeros((k4 // 2, n), jnp.uint8),
+            "w2": jnp.zeros((k2 // 4, n), jnp.uint8),
+            "w1": jnp.zeros((k1 // 8, n), jnp.uint8),
+            "perm": jnp.arange(k, dtype=jnp.int32),
+            "pbits_sorted": jnp.asarray(pbits),
+            "wscale": None if qcfg.scale_mode == "none"
+                      else jnp.ones((num_groups(k, g),), jnp.float32),
+        })
+    return params
+
+
+def _weight_scales(w, qcfg: QuantConfig, group_size: int):
+    if qcfg.scale_mode == "none":
+        return jnp.ones((num_groups(w.shape[0], group_size),), jnp.float32)
+    return quant.per_group_weight_scale(w, group_size)
+
+
+def _act_scale(x, qcfg: QuantConfig):
+    if qcfg.act_scale_mode == "none":
+        return jnp.asarray(1.0, jnp.float32)
+    return quant.abs_max_scale(x).astype(jnp.float32)
+
+
+def _quantize_weight(w, pbits, qcfg: QuantConfig, group_size: int):
+    """fake-quant W [K, N] along K with per-group precisions."""
+    sw = _weight_scales(w, qcfg, group_size)                  # [K//G]
+    wq_t = quant.fake_quant(jnp.swapaxes(w, 0, 1), pbits,
+                            sw, group_size)                   # [N, K]
+    return jnp.swapaxes(wq_t, 0, 1)
+
+
+def _quantize_act(x, pbits, qcfg: QuantConfig, group_size: int):
+    if not qcfg.quantize_activations:
+        return x
+    sx = _act_scale(x, qcfg)
+    return quant.fake_quant(x, pbits, sx, group_size)
+
+
+def _matmul(x, w, b=None):
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def linear_apply(params: Dict, x, qcfg: QuantConfig,
+                 rng: Optional[jax.Array] = None):
+    """x: [..., K] -> [..., N]."""
+    b = params.get("b")
+    w = params["w"] if "w" in params else None
+    mode = qcfg.mode
+    if mode != "fp" and w is not None and "s" not in params \
+            and "pbits" not in params:
+        mode = "fp"  # skip layer: holds only a plain weight
+
+    if mode == "fp":
+        return _matmul(x, w, b)
+
+    k = w.shape[0] if w is not None else params["perm"].shape[0]
+    g = eff_group_size(k, qcfg.group_size)
+
+    if mode == "noise":
+        assert rng is not None, "Phase I needs an rng"
+        kw, kx = jax.random.split(rng)
+        # Normalize group abs-max to 1.0 (not grid-max 1.875): the Phase-I
+        # clip +-(2 - sigma) must not bite below sigma ~= 1, else its loss
+        # gradient stalls the precision search at ~sigma 0.27 for every
+        # group (the paper's scale-free setting has weights well inside +-2).
+        sw = _weight_scales(w, qcfg, g) * float(quant._static_grid_max(4))
+        wf = jnp.asarray(w, jnp.float32) / jnp.repeat(
+            sw, g, total_repeat_length=k)[:, None]
+        wn = noise_lib.inject_weight_noise(wf, params["s"], kw, g)
+        wn = (wn * jnp.repeat(sw, g, total_repeat_length=k)[:, None]
+              ).astype(x.dtype)
+        if qcfg.quantize_activations:
+            sx = _act_scale(x, qcfg)
+            x = noise_lib.inject_act_noise(x, params["s"], kx, sx, g)
+        return _matmul(x, wn, b)
+
+    if mode == "qat":
+        pbits = params["pbits"].astype(jnp.float32)
+        if qcfg.prequantized:
+            wq = w.astype(x.dtype)       # already on the grid (hoisted)
+        else:
+            wq = _quantize_weight(w, pbits, qcfg, g).astype(x.dtype)
+        xq = _quantize_act(x, pbits, qcfg, g)
+        return _matmul(xq, wq, b)
+
+    if mode == "serve":
+        return _serve_apply(params, x, qcfg, g)
+
+    raise ValueError(mode)
+
+
+def _serve_apply(params: Dict, x, qcfg: QuantConfig, group_size: int):
+    """Packed-weight inference path (pure-jnp emulation of the Pallas
+    kernel's arithmetic: uint8 loads -> shift/mask unpack -> affine dequant
+    -> bf16 matmul, fp32 accumulate). ``kernels.ops.packed_matmul`` is the
+    fused on-TPU version; its HLO byte traffic matches this path's."""
+    # Segment sizes are static: recover them from the packed buffer shapes.
+    k4 = params["w4"].shape[0] * 2
+    k2 = params["w2"].shape[0] * 4
+    k1 = params["w1"].shape[0] * 8
+    k = k4 + k2 + k1
+    x = jnp.take(x, params["perm"], axis=-1)          # channel reordering
+    # Dequantize directly in the compute dtype: every SMOL grid value is
+    # exactly representable in bf16 (4 mantissa bits suffice), and the fp32
+    # intermediate would double the dequant-materialization traffic (§Perf).
+    cdt = x.dtype
+    parts = []
+    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+        if kp == 0:
+            continue
+        u = pack_lib.unpack_codes(params[name], p, kp).astype(cdt)
+        wd_p = (2.0 * u - jnp.asarray(2 ** p - 1, cdt)) \
+            * jnp.asarray(2.0 ** (1 - p), cdt)
+        parts.append(wd_p)
+    wd = jnp.concatenate(parts, axis=0)
+    if params.get("wscale") is not None:
+        s_full = jnp.repeat(params["wscale"].astype(cdt), group_size,
+                            total_repeat_length=k)
+        wd = wd * s_full[:, None]
+    if qcfg.quantize_activations:
+        pbits = params["pbits_sorted"].astype(jnp.float32)
+        sx = _act_scale(x, qcfg)
+        x = quant.fake_quant(x, pbits, sx, group_size)
+    y = _matmul(x, wd, params.get("b"))
+    return y
+
+
+def prequantize_tree(params, qcfg: QuantConfig, compute_dtype=jnp.bfloat16):
+    """Fake-quantize every (w, pbits) weight in the tree ONCE (per step),
+    casting to the compute dtype. Differentiable: wrap in jax.vjp at the
+    call site so the microbatch scan consumes already-quantized weights and
+    the quantize backward runs once (§Perf 'hoisted weight quantization').
+    Handles stacked scan/expert leading dims via vmap."""
+    def fix(node):
+        if not (isinstance(node, dict) and "w" in node and "pbits" in node):
+            return node
+        node = dict(node)
+        w, pbits = node["w"], node["pbits"]
+        g = eff_group_size(w.shape[-2], qcfg.group_size)
+
+        def q2d(w2, pb):
+            return _quantize_weight(w2, pb.astype(jnp.float32), qcfg, g)
+
+        fn = q2d
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        node["w"] = fn(w, pbits).astype(compute_dtype)
+        return node
+    return _tree_map_dicts(fix, params)
+
+
+def serve_params_from_qat(params: Dict, qcfg: QuantConfig) -> Dict:
+    """Offline deploy conversion: trained (w, pbits) -> channel-reordered
+    packed buffers + metadata. The returned dict is a valid SmolLinear
+    "serve" params pytree."""
+    w = np.asarray(params["w"], np.float32)
+    pbits = np.asarray(params["pbits"])
+    k, n = w.shape
+    g = eff_group_size(k, qcfg.group_size)
+    gperm = patterns_lib.reorder_channels(pbits)
+    perm = patterns_lib.expand_group_perm(gperm, g)
+    w_sorted = w[perm]
+    pbits_sorted = pbits[gperm]
+    if qcfg.scale_mode == "none":
+        scales = None
+    else:
+        scales = np.asarray(quant.per_group_weight_scale(
+            jnp.asarray(w_sorted), g))
+    packed = pack_lib.quantize_pack_weight(jnp.asarray(w_sorted),
+                                           pbits_sorted, scales, g)
+    out = {
+        "w4": packed["w4"], "w2": packed["w2"], "w1": packed["w1"],
+        "perm": jnp.asarray(perm, jnp.int32),
+        "pbits_sorted": jnp.asarray(pbits_sorted),
+        "wscale": None if scales is None else jnp.asarray(scales),
+    }
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def serve_param_specs(k: int, n: int, qcfg: QuantConfig, *,
+                      use_bias: bool = False, dtype=jnp.float32) -> Dict:
+    """ShapeDtypeStruct stand-ins for a serve-mode SmolLinear — used by the
+    multi-pod dry-run (no allocation)."""
+    k4, k2, k1 = qcfg.segments(k) if k >= qcfg.group_size else (k, 0, 0)
+    g = eff_group_size(k, qcfg.group_size)
+    sd = jax.ShapeDtypeStruct
+    out = {
+        "w4": sd((k4 // 2, n), jnp.uint8),
+        "w2": sd((k2 // 4, n), jnp.uint8),
+        "w1": sd((k1 // 8, n), jnp.uint8),
+        "perm": sd((k,), jnp.int32),
+        "pbits_sorted": sd((num_groups(k, g),), jnp.int8),
+        "wscale": None if qcfg.scale_mode == "none"
+                  else sd((num_groups(k, g),), jnp.float32),
+    }
+    if use_bias:
+        out["b"] = sd((n,), dtype)
+    return out
+
+
+def bit_penalty_of_params(params) -> jnp.ndarray:
+    """Sum the Phase-I bit regularizer over every ``s`` leaf in a pytree."""
+    total = jnp.asarray(0.0, jnp.float32)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if path and getattr(path[-1], "key", None) == "s":
+            total = total + noise_lib.bit_penalty(leaf)
+    return total
+
+
+def project_noise_weights(params, qcfg: QuantConfig):
+    """Post-optimizer projection (paper Alg. 1 line 7) applied to every
+    (w, s) pair in a pytree of SmolLinear params. Handles stacked scan /
+    expert leading dims via vmap."""
+    def fix(node):
+        if isinstance(node, dict) and "s" in node and "w" in node:
+            node = dict(node)
+            w = node["w"]
+            k = w.shape[-2]
+            g = eff_group_size(k, qcfg.group_size)
+
+            def proj2d(w2, s1):
+                sw = _weight_scales(w2, qcfg, g)
+                sfull = jnp.repeat(sw, g, total_repeat_length=k)[:, None]
+                lim = noise_lib.clip_weights(
+                    jnp.asarray(w2, jnp.float32) / sfull, s1, g)
+                return (lim * sfull).astype(w2.dtype)
+
+            fn = proj2d
+            for _ in range(w.ndim - 2):
+                fn = jax.vmap(fn)
+            node["w"] = fn(w, node["s"])
+            return node
+        return node
+    return _tree_map_dicts(fix, params)
+
+
+def _tree_map_dicts(fn, tree):
+    if isinstance(tree, dict):
+        new = fn(tree)
+        if new is not tree:
+            return new
+        return {k: _tree_map_dicts(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_tree_map_dicts(fn, v) for v in tree)
+    return tree

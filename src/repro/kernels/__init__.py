@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the SONIQ hot paths (validated via interpret=True).
+
+packed_matmul — mixed 1/2/4-bit packed GEMM (the paper's vmac_Pn)
+quant_pack    — fused SMOL quantize + bit-pack
+noise_inject  — fused Phase-I perturbation with in-kernel PRNG
+"""
+from . import ops, prng, ref
+from .ops import noise_inject, packed_matmul, packed_segment_matmul, quantize_pack
+
+__all__ = ["ops", "prng", "ref", "noise_inject", "packed_matmul",
+           "packed_segment_matmul", "quantize_pack"]

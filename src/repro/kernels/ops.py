@@ -1,0 +1,81 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) and False on TPU.
+Every op has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
+assert_allclose against it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.qtypes import GROUP_SIZE
+from . import noise_inject as _ni
+from . import packed_matmul as _pm
+from . import quant_pack as _qp
+from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def packed_segment_matmul(x, wp, scales=None, *, p: int,
+                          act_quant: bool = False, act_scale=None,
+                          interpret: Optional[bool] = None, **blocks):
+    """Uniform-precision packed GEMM; see packed_matmul.py."""
+    interpret = default_interpret() if interpret is None else interpret
+    if act_quant and act_scale is not None:
+        x = x / act_scale
+    y = _pm.packed_segment_matmul(x, wp, scales, p=p, act_quant=act_quant,
+                                  interpret=interpret, **blocks)
+    if act_quant and act_scale is not None:
+        y = y * act_scale
+    return y
+
+
+def packed_matmul(x, serve_params: Dict, *, act_quant: bool = True,
+                  interpret: Optional[bool] = None, **blocks):
+    """Full SmolLinear serve-mode matmul over the [K4|K2|K1] segments of a
+    ``smol.serve_params_from_qat`` pytree. Drop-in for the jnp serve path."""
+    interpret = default_interpret() if interpret is None else interpret
+    x = jnp.take(x, serve_params["perm"], axis=-1)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    k4 = serve_params["w4"].shape[0] * 2
+    k2 = serve_params["w2"].shape[0] * 4
+    k1 = serve_params["w1"].shape[0] * 8
+    scales = serve_params.get("wscale")
+    act_scale = quant.abs_max_scale(x2) if act_quant else None
+    n = max(serve_params[k].shape[1] for k in ("w4", "w2", "w1"))
+    y = jnp.zeros((x2.shape[0], n), jnp.float32)
+    off, goff = 0, 0
+    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+        if kp == 0:
+            continue
+        seg_scales = None if scales is None else \
+            jax.lax.dynamic_slice_in_dim(scales, goff, kp // GROUP_SIZE)
+        y = y + packed_segment_matmul(
+            x2[:, off:off + kp], serve_params[name], seg_scales, p=p,
+            act_quant=act_quant, act_scale=act_scale, interpret=interpret,
+            **blocks)
+        off += kp
+        goff += kp // GROUP_SIZE
+    if serve_params.get("b") is not None and "b" in serve_params:
+        y = y + serve_params["b"].astype(y.dtype)
+    return y.reshape(lead + (n,))
+
+
+def quantize_pack(w, scales=None, *, p: int,
+                  interpret: Optional[bool] = None, **blocks):
+    interpret = default_interpret() if interpret is None else interpret
+    return _qp.quantize_pack(w, scales, p=p, interpret=interpret, **blocks)
+
+
+def noise_inject(w, s, seed, *, interpret: Optional[bool] = None, **blocks):
+    interpret = default_interpret() if interpret is None else interpret
+    return _ni.noise_inject(w, s, seed, interpret=interpret, **blocks)

@@ -1,0 +1,124 @@
+"""Mixed ultra-low-precision packed GEMM — the TPU `vmac_Pn` (paper §IV-B).
+
+One uniform-precision segment per pallas_call (the paper's sorted-run
+execution, Obs. 4): x [M, Kp] @ Wpacked [Kp*p//8, N] -> [M, N] f32, with
+in-register unpack (shift/mask), affine SMOL dequant
+``v = (2u - (2^p - 1)) * 2^(1-p)``, optional per-16-channel-group scales,
+optional activation snap-to-grid (input-weight consistency, Obs. 3), and
+fp32 MXU accumulation (the paper's 16.6 accumulator widened to TPU-native).
+
+Grid (M/bm, N/bn, Kp/bk), K innermost (accumulation). VMEM working set per
+step at defaults (bm=bk=256, bn=128, f32):
+    x 256x256x4 = 256 KiB, wp <= 256x128 = 32 KiB, out 256x128x4 = 128 KiB,
+    unpacked w 256x128x4 = 128 KiB  ->  ~0.6 MiB of ~16 MiB VMEM.
+MXU dims (bm, bk, bn) are multiples of 128/8 as required.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.qtypes import GROUP_SIZE
+
+
+def _tpu_compiler_params():
+    """K is the innermost (accumulation) grid dim — mark it 'arbitrary' so
+    Mosaic may not reorder/parallelize it. Ignored in interpret mode."""
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:  # older jax spelling
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+def fit_block(total: int, want: int, multiple: int = 1) -> int:
+    """Largest divisor of ``total`` that is <= want and a multiple of
+    ``multiple`` (segment sizes are only guaranteed multiples of the
+    16-channel group, not of the preferred MXU tile)."""
+    want = min(want, total)
+    for d in range(want, multiple - 1, -1):
+        if total % d == 0 and d % multiple == 0:
+            return d
+    assert total % multiple == 0, (total, multiple)
+    return multiple
+
+
+def _unpack_dequant(wp, p: int, bk: int):
+    """[bk*p//8, bn] uint8 -> [bk, bn] f32 on the SMOL grid (no scale)."""
+    vpb = 8 // p
+    mask = np.uint8((1 << p) - 1)
+    parts = [((wp >> np.uint8(p * j)) & mask) for j in range(vpb)]
+    u = jnp.stack(parts, axis=1).reshape(bk, wp.shape[-1])
+    u = u.astype(jnp.float32)
+    return (2.0 * u - float(2 ** p - 1)) * float(2.0 ** (1 - p))
+
+
+def _snap(x, p: int):
+    """Snap (already scale-normalized) activations to the p-bit grid."""
+    h = float(2.0 ** (1 - p))
+    two_p = float(2 ** p)
+    u = jnp.clip(jnp.round((x / h + (two_p - 1.0)) / 2.0), 0.0, two_p - 1.0)
+    return (2.0 * u - (two_p - 1.0)) * h
+
+
+def _kernel(x_ref, wp_ref, s_ref, o_ref, *, p: int, bk: int,
+            act_quant: bool, use_scales: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    if act_quant:
+        x = _snap(x, p)
+    wd = _unpack_dequant(wp_ref[...], p, bk)
+    if use_scales:
+        sig = s_ref[...].astype(jnp.float32)            # [bk//16, 1]
+        sig = jnp.repeat(sig, GROUP_SIZE, axis=0)       # [bk, 1]
+        wd = wd * sig
+    o_ref[...] += jax.lax.dot(x, wd, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p", "block_m", "block_n", "block_k", "act_quant", "interpret"))
+def packed_segment_matmul(x, wp, scales, *, p: int, block_m: int = 256,
+                          block_n: int = 128, block_k: int = 256,
+                          act_quant: bool = False, interpret: bool = True):
+    """x [M, Kp] @ unpack(wp [Kp*p//8, N]) -> [M, N] f32.
+
+    scales: [Kp//16] per-group f32 or None. Pre-divide x by the activation
+    scale (and rescale the output) when act_quant=True.
+    """
+    m, kp = x.shape
+    n = wp.shape[1]
+    assert wp.shape[0] * (8 // p) == kp, (wp.shape, kp, p)
+    bm = fit_block(m, block_m)
+    bn = fit_block(n, block_n)
+    bk = fit_block(kp, block_k, GROUP_SIZE)
+
+    use_scales = scales is not None
+    if not use_scales:  # dummy operand keeps one kernel signature
+        scales = jnp.ones((kp // GROUP_SIZE,), jnp.float32)
+    s2d = scales.reshape(-1, 1).astype(jnp.float32)
+
+    grid = (m // bm, n // bn, kp // bk)
+    kern = functools.partial(_kernel, p=p, bk=bk, act_quant=act_quant,
+                             use_scales=use_scales)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk * p // 8, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // GROUP_SIZE, 1), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_tpu_compiler_params(),
+        interpret=interpret,
+    )(x, wp, s2d)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (interpret=True on
+CPU; identical semantics on TPU). They intentionally reuse the core
+quantization library so kernel tests transitively pin down core semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as pack_lib
+from repro.core import quant
+from . import prng
+
+
+def packed_segment_matmul_ref(x, wp, scales, p: int, *, act_quant: bool = False):
+    """x [M, Kp] (f32/bf16) @ unpack_dequant(wp [Kp*p//8, N]) -> [M, N] f32.
+
+    scales: per-16-channel-group [Kp//16] f32 or None.
+    act_quant: snap x to the p-bit grid first (x must already be in scale
+    units — the wrapper divides by the activation scale).
+    """
+    kp = wp.shape[0] * (8 // p)
+    u = pack_lib.unpack_codes(wp, p, kp)
+    wd = quant.dequantize_int(u, p)
+    if scales is not None:
+        s_full = jnp.repeat(scales.astype(jnp.float32), 16,
+                            total_repeat_length=kp)
+        wd = wd * s_full[:, None]
+    xs = jnp.asarray(x, jnp.float32)
+    if act_quant:
+        xs = quant.snap_to_grid(xs, p)
+    return jax.lax.dot_general(
+        xs, wd.astype(jnp.float32),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def packed_matmul_ref(x, w4, w2, w1, scales, *, act_quant: bool = False):
+    """Full mixed [K4|K2|K1] packed matmul (segments contiguous along K)."""
+    k4, k2, k1 = w4.shape[0] * 2, w2.shape[0] * 4, w1.shape[0] * 8
+    y = jnp.zeros(x.shape[:-1] + (max(w4.shape[-1], w2.shape[-1],
+                                      w1.shape[-1]),), jnp.float32)
+    off = 0
+    goff = 0
+    for wp, p, kp in ((w4, 4, k4), (w2, 2, k2), (w1, 1, k1)):
+        if kp == 0:
+            continue
+        seg_scales = None if scales is None else \
+            jax.lax.dynamic_slice_in_dim(scales, goff, kp // 16)
+        y = y + packed_segment_matmul_ref(
+            x[..., off:off + kp], wp, seg_scales, p, act_quant=act_quant)
+        off += kp
+        goff += kp // 16
+    return y
+
+
+def quantize_pack_ref(w, p: int, scales=None):
+    """w [K, N] f32 -> packed [K*p//8, N] uint8 codes on the SMOL grid."""
+    k = w.shape[0]
+    ws = jnp.asarray(w, jnp.float32)
+    if scales is not None:
+        s_full = jnp.repeat(scales.astype(jnp.float32), 16,
+                            total_repeat_length=k)
+        ws = ws / s_full[:, None]
+    u = quant.quantize_to_int(ws, p).astype(jnp.uint8)
+    return pack_lib.pack_codes(u, p)
+
+
+def noise_inject_ref(w, s, seed: int, *, group_size: int = 16):
+    """w [K, N] + sigma(s)*eps, clipped to +-(2 - sigma); eps from the same
+    counter-based hash the kernel uses -> exact equality with the kernel."""
+    w = jnp.asarray(w, jnp.float32)
+    k, n = w.shape
+    idx = (jnp.arange(k, dtype=jnp.uint32)[:, None] * jnp.uint32(n)
+           + jnp.arange(n, dtype=jnp.uint32)[None, :])
+    eps = prng.uniform_pm1(idx, seed)
+    sig = jnp.repeat(jax.nn.sigmoid(jnp.asarray(s, jnp.float32)), group_size,
+                     total_repeat_length=k)[:, None]
+    out = w + sig * eps
+    return jnp.clip(out, -(2.0 - sig), 2.0 - sig)

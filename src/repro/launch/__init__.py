@@ -1,0 +1,3 @@
+# NOTE: dryrun is intentionally NOT imported here — it sets XLA_FLAGS at
+# import time and must only run as __main__ (python -m repro.launch.dryrun).
+from . import mesh, sharding, specs

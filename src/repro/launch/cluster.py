@@ -1,0 +1,125 @@
+"""Multiprocess cluster simulator: coordinator + workers with heartbeats,
+failure injection, and elastic re-mesh — the control-plane logic a real
+TPU fleet runs, exercised end-to-end on CPU (tests/test_cluster_sim.py).
+
+Workers run short training bursts, heartbeat to the coordinator through a
+multiprocessing queue, and checkpoint to shared storage. The coordinator
+detects missed heartbeats (HeartbeatMonitor), plans a smaller mesh
+(plan_remesh), rescales grad accumulation (rescale_microbatches), and
+relaunches survivors from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import queue
+import time
+from typing import Dict, List, Optional
+
+from repro.train import ft
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    num_hosts: int = 4
+    chips_per_host: int = 4
+    model_parallel: int = 4
+    global_batch: int = 32
+    heartbeat_timeout: float = 5.0
+    steps_per_burst: int = 2
+
+
+def _worker(host_id: int, cfg: ClusterConfig, beat_q: mp.Queue,
+            ctrl_q: mp.Queue, ckpt_dir: str, die_after: Optional[int]):
+    """One host: train bursts + heartbeats; dies silently at die_after."""
+    step = 0
+    while True:
+        try:
+            msg = ctrl_q.get_nowait()
+            if msg == "stop":
+                return
+        except queue.Empty:
+            pass
+        if die_after is not None and step >= die_after:
+            return                      # simulated hardware failure
+        time.sleep(0.05)                # "training burst"
+        step += cfg.steps_per_burst
+        with open(os.path.join(ckpt_dir, f"host{host_id}.step"), "w") as f:
+            f.write(str(step))
+        beat_q.put((host_id, step, time.time()))
+
+
+class Coordinator:
+    def __init__(self, cfg: ClusterConfig, ckpt_dir: str):
+        self.cfg = cfg
+        self.ckpt_dir = ckpt_dir
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self.events: List[Dict] = []
+
+    def run(self, die_host: Optional[int] = None, die_after: int = 6,
+            run_for: float = 4.0) -> Dict:
+        cfg = self.cfg
+        ctx = mp.get_context("spawn")   # fork is unsafe under JAX threads
+        beat_q = ctx.Queue()
+        ctrls = [ctx.Queue() for _ in range(cfg.num_hosts)]
+        procs = [
+            ctx.Process(target=_worker,
+                        args=(h, cfg, beat_q, ctrls[h], self.ckpt_dir,
+                              die_after if h == die_host else None),
+                        daemon=True)
+            for h in range(cfg.num_hosts)]
+        for p in procs:
+            p.start()
+
+        hb = ft.HeartbeatMonitor(range(cfg.num_hosts),
+                                 timeout=cfg.heartbeat_timeout)
+        mesh = (cfg.num_hosts * cfg.chips_per_host // cfg.model_parallel,
+                cfg.model_parallel)
+        microbatches = 1
+        deadline = time.time() + run_for
+        remeshed = False
+        while time.time() < deadline:
+            try:
+                host, step, t = beat_q.get(timeout=0.2)
+                hb.beat(host, t)
+            except queue.Empty:
+                pass
+            # fast failure detection for the simulation: a host that
+            # hasn't beaten in 1s while others have is failed
+            now = time.time()
+            alive = [h for h, st in hb.hosts.items()
+                     if now - st.last_beat < 1.0]
+            dead = [h for h in hb.hosts if h not in alive and not remeshed]
+            if dead and len(alive) >= cfg.model_parallel // cfg.chips_per_host:
+                survivors = len(alive)
+                new_data, model = ft.plan_remesh(
+                    survivors, model=cfg.model_parallel,
+                    chips_per_host=cfg.chips_per_host)
+                microbatches = ft.rescale_microbatches(
+                    cfg.global_batch, old_data=mesh[0], new_data=new_data,
+                    old_mb=microbatches)
+                self.events.append({
+                    "type": "remesh", "dead": dead, "survivors": survivors,
+                    "new_mesh": (new_data, model),
+                    "microbatches": microbatches,
+                    "resume_step": self._latest_step(alive)})
+                mesh = (new_data, model)
+                remeshed = True
+        for q in ctrls:
+            q.put("stop")
+        for p in procs:
+            p.join(timeout=5)
+            if p.is_alive():
+                p.terminate()
+        return {"events": self.events, "final_mesh": mesh,
+                "microbatches": microbatches}
+
+    def _latest_step(self, alive: List[int]) -> int:
+        steps = []
+        for h in alive:
+            p = os.path.join(self.ckpt_dir, f"host{h}.step")
+            if os.path.exists(p):
+                with open(p) as f:
+                    steps.append(int(f.read().strip() or 0))
+        return min(steps) if steps else 0

@@ -1,0 +1,257 @@
+"""Trip-count-corrected cost analysis over compiled (scheduled) HLO text.
+
+XLA's aggregate ``compiled.cost_analysis()`` counts every while-loop body
+ONCE, so any scanned program (layers, microbatches, attention blocks) is
+undercounted by exactly the trip counts. The scheduled HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, so we:
+
+  1. split the module into computations and parse per-instruction
+     (dot FLOPs from output x contraction dims; bytes as operands+outputs of
+     top-level instructions, XLA-cost-analysis style; collective bytes),
+  2. build the call graph (while bodies x trip count, fusion/reduce
+     sub-computations marked internal: their bytes are *not* HBM traffic,
+     but any dots inside inherit the caller's multiplier),
+  3. accumulate totals x the product of enclosing trip counts.
+
+Everything is per-partition (the HLO is post-SPMD), matching the roofline
+convention used throughout EXPERIMENTS.md. Validated against unrolled
+references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "f8e4m3": 1, "s64": 8, "u64": 8, "s32": 4,
+               "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1,
+               "u4": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count\D*?(\d+)')
+_CALLED = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+SKIP_BYTES_OPS = {"parameter", "get-tuple-element", "tuple", "constant",
+                  "after-all", "bitcast", "iota", "partition-id",
+                  "replica-id", "rng-get-and-update-state", "while",
+                  "conditional", "call", "custom-call"}
+
+
+def _type_bytes(ty: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(ty):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(ty: str) -> List[int]:
+    m = _SHAPE.search(ty)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    ty: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry = None
+    cur: Optional[Comp] = None
+    for line in hlo.splitlines():
+        if line.startswith("}"):
+            cur = None
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), line)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.ty
+    return comps, entry
+
+
+def _args_str(ins: Instr) -> str:
+    """Operand list text: after ``<op>(`` up to the matching close paren
+    (the instruction TYPE may itself be a parenthesized tuple)."""
+    marker = f" {ins.op}("
+    idx = ins.line.find(marker)
+    if idx < 0:
+        return ""
+    after = ins.line[idx + len(marker):]
+    return after.split(")", 1)[0]
+
+
+def _dot_flops(ins: Instr, comp: Comp) -> int:
+    """2 x prod(output dims) x prod(contracting dims of lhs)."""
+    out_dims = _shape_dims(ins.ty)
+    ops = _OPERAND.findall(_args_str(ins))
+    if not ops:
+        return 0
+    lhs_ty = comp.shapes.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_ty)
+    cm = _CONTRACT.search(ins.line)
+    contract = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2 * out * contract
+
+
+def _instr_bytes(ins: Instr, comp: Comp, comps=None) -> int:
+    """Operand + output bytes, with sliced-access ops counted by the bytes
+    they actually touch (in-place DUS on an aliased KV cache does not read/
+    write the whole cache)."""
+    if ins.op in SKIP_BYTES_OPS:
+        return 0
+    ops = _OPERAND.findall(_args_str(ins))
+    if ins.op == "dynamic-update-slice" and len(ops) >= 2:
+        return 2 * _type_bytes(comp.shapes.get(ops[1], ""))
+    if ins.op == "dynamic-slice":
+        return 2 * _type_bytes(ins.ty)
+    if ins.op == "scatter" and len(ops) >= 3:
+        return (2 * _type_bytes(comp.shapes.get(ops[2], ""))
+                + _type_bytes(comp.shapes.get(ops[1], "")))
+    if ins.op == "gather" and len(ops) >= 2:
+        return 2 * _type_bytes(ins.ty) \
+            + _type_bytes(comp.shapes.get(ops[1], ""))
+    if ins.op == "fusion" and comps is not None:
+        sub_ops = set()
+        for cn in _CALLED.findall(ins.line):
+            sub = comps.get(cn)
+            if sub:
+                sub_ops |= {i.op for i in sub.instrs}
+        out_b = _type_bytes(ins.ty)
+        op_bytes = [_type_bytes(comp.shapes.get(o, "")) for o in ops]
+        if "dynamic-update-slice" in sub_ops:
+            # fused in-place DUS (KV-cache/scan-stacking writes): traffic =
+            # the update slice + small inputs, read + written once — NOT the
+            # whole aliased buffer.
+            small = sum(b for b in op_bytes if b < out_b)
+            return 2 * max(small, 1)
+        if "dynamic-slice" in sub_ops or "gather" in sub_ops:
+            # fused sliced reads of a big buffer: cap each operand at the
+            # fusion output size (upper bound on touched bytes).
+            return out_b + sum(min(b, out_b) for b in op_bytes)
+    total = _type_bytes(ins.ty)
+    for op_name in ops:
+        total += _type_bytes(comp.shapes.get(op_name, ""))
+    return total
+
+
+@dataclasses.dataclass
+class CostTotals:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo: str) -> CostTotals:
+    comps, entry = parse_computations(hlo)
+    totals = CostTotals()
+    if entry is None:
+        totals.warnings.append("no ENTRY computation found")
+        return totals
+
+    # multiplier per computation; fused/applied comps excluded from bytes
+    mult: Dict[str, float] = {}
+    internal: set = set()
+
+    def visit(name: str, m: float, is_internal: bool):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        if is_internal:
+            internal.add(name)
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                tm = _TRIP.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                if not tm:
+                    totals.warnings.append(
+                        f"while without known_trip_count in {name}")
+                for called in _CALLED.findall(ins.line):
+                    visit(called, m * trip, is_internal)
+            elif ins.op == "conditional":
+                bm = _BRANCHES.search(ins.line)
+                if bm:
+                    for b in _OPERAND.findall(bm.group(1)):
+                        visit(b, m, is_internal)
+            elif ins.op in ("fusion", "reduce", "scatter", "sort", "map",
+                            "reduce-window", "select-and-scatter", "call",
+                            "reduce-scatter", "all-reduce",
+                            "all-reduce-start"):
+                for called in _CALLED.findall(ins.line):
+                    visit(called, m, True)
+
+    visit(entry, 1.0, False)
+
+    for name, m in mult.items():
+        comp = comps[name]
+        is_int = name in internal
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                totals.dot_flops += m * _dot_flops(ins, comp)
+            if is_int:
+                continue
+            totals.bytes_accessed += m * _instr_bytes(ins, comp, comps)
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in COLLECTIVES:
+                b = _type_bytes(ins.ty)
+                totals.collective_bytes[base] = \
+                    totals.collective_bytes.get(base, 0.0) + m * b
+                totals.collective_counts[base] = \
+                    totals.collective_counts.get(base, 0.0) + m
+    return totals

@@ -1,0 +1,109 @@
+"""Decomposition tooling over compiled HLO: attribute trip-count-corrected
+bytes / collective bytes to individual instructions, and quantify the
+dequant-materialization traffic a fused Pallas packed-matmul eliminates.
+
+Used by the §Perf hillclimbs to locate dominant-term contributors instead
+of guessing.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Tuple
+
+from . import hlo_cost
+
+
+def _multipliers(comps, entry):
+    mult: Dict[str, float] = {}
+    internal = set()
+
+    def visit(name, m, is_int):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        if is_int:
+            internal.add(name)
+        for ins in comps[name].instrs:
+            if ins.op == "while":
+                tm = hlo_cost._TRIP.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                for c in hlo_cost._CALLED.findall(ins.line):
+                    visit(c, m * trip, is_int)
+            elif ins.op == "conditional":
+                bm = hlo_cost._BRANCHES.search(ins.line)
+                if bm:
+                    for b in hlo_cost._OPERAND.findall(bm.group(1)):
+                        visit(b, m, is_int)
+            elif ins.op in ("fusion", "reduce", "scatter", "sort", "map",
+                            "reduce-window", "select-and-scatter", "call",
+                            "reduce-scatter", "all-reduce",
+                            "all-reduce-start"):
+                for c in hlo_cost._CALLED.findall(ins.line):
+                    visit(c, m, True)
+
+    visit(entry, 1.0, False)
+    return mult, internal
+
+
+def top_bytes(hlo: str, n: int = 20) -> List[Tuple[float, str]]:
+    """Largest per-instruction corrected byte contributors."""
+    comps, entry = hlo_cost.parse_computations(hlo)
+    mult, internal = _multipliers(comps, entry)
+    rows = []
+    for name, m in mult.items():
+        if name in internal:
+            continue
+        comp = comps[name]
+        for ins in comp.instrs:
+            b = hlo_cost._instr_bytes(ins, comp, comps) * m
+            if b > 0:
+                rows.append((b, f"x{m:.0f} {ins.op} {ins.ty[:40]} "
+                             f"{ins.line.strip()[:110]}"))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def top_collectives(hlo: str, n: int = 20) -> List[Tuple[float, str]]:
+    comps, entry = hlo_cost.parse_computations(hlo)
+    mult, internal = _multipliers(comps, entry)
+    rows = []
+    for name, m in mult.items():
+        if name in internal:
+            continue
+        comp = comps[name]
+        for ins in comp.instrs:
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in hlo_cost.COLLECTIVES:
+                b = hlo_cost._type_bytes(ins.ty) * m
+                rows.append((b, f"x{m:.0f} {base} {ins.ty[:50]} "
+                             f"meta={_meta(ins.line)}"))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def _meta(line: str) -> str:
+    i = line.find("op_name=")
+    return line[i + 9:i + 100].split('"')[0] if i > 0 else ""
+
+
+def dequant_materialization_bytes(hlo: str) -> float:
+    """Corrected bytes of fusions that unpack uint8 codes into a wide
+    weight tensor consumed by a dot — exactly the traffic the Pallas
+    packed_matmul keeps in VMEM (write + re-read of the fusion output)."""
+    comps, entry = hlo_cost.parse_computations(hlo)
+    mult, internal = _multipliers(comps, entry)
+    total = 0.0
+    for name, m in mult.items():
+        if name in internal:
+            continue
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.op != "fusion":
+                continue
+            ops = hlo_cost._OPERAND.findall(hlo_cost._args_str(ins))
+            has_u8 = any("u8[" in comp.shapes.get(o, "") for o in ops)
+            out_b = hlo_cost._type_bytes(ins.ty)
+            if has_u8 and out_b > (1 << 20) and \
+                    ("bf16[" in ins.ty or "f32[" in ins.ty):
+                total += 2.0 * out_b * m      # write + re-read by the dot
+    return total

@@ -1,0 +1,205 @@
+"""Partition rules: logical activation axes + per-parameter PartitionSpecs.
+
+Strategy (DESIGN.md §4):
+  * DP over ("pod","data") for the batch; FSDP/ZeRO-3 parameter sharding
+    over the same axes on a non-contracting weight dim.
+  * TP over "model": column-parallel (wq/wk/wv/up/gate/in_proj) shard N;
+    row-parallel (wo/down/out_proj) shard K. Quantization metadata
+    (s/pbits/scales) stays replicated — it is K/16-sized.
+  * EP over "model" when num_experts divides the model axis; otherwise
+    experts replicate and the expert-internal FFN dim takes "model".
+  * Serve mode: packed uint8 weights shard N over "model" only (decode is
+    KV/weight-bytes bound; K-sharding packed carriers hits 8/p-divisibility
+    walls for no memory win).
+Every rule degrades to None when the dim is not divisible by the axis size
+(e.g. starcoder2's 36 heads on a 16-way model axis) — recorded by
+`fallbacks()` so EXPERIMENTS.md can report them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+COL_PARENTS = {"wq", "wk", "wv", "up", "gate", "in_proj"}
+ROW_PARENTS = {"wo", "down", "out_proj"}
+REPL_PARENTS = {"router", "frontend"}
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def activation_rules(cfg, mesh, *, batch: int) -> Dict[str, object]:
+    """Logical-axis table for models.shard under this (arch, mesh, batch)."""
+    ax = dict(mesh.shape)
+    model = ax.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in ax)
+    dp_size = int(np.prod([ax[a] for a in dp])) if dp else 1
+    ep = _div(cfg.num_experts, model)
+    rules = {
+        "batch": dp if _div(batch, dp_size) and dp_size > 1 else None,
+        "seq": None,
+        "seq_shard": "model",
+        "embed": None,
+        "heads": "model" if _div(cfg.num_heads, model) else None,
+        "kv_heads": "model" if _div(cfg.num_kv_heads, model) else None,
+        "vocab": "model" if _div(cfg.vocab_size, model) else None,
+        "ff": "model" if _div(cfg.d_ff, model) else None,
+        "experts": "model" if ep else None,
+        "expert_ff": None if ep else
+                     ("model" if _div(cfg.d_ff, model) else None),
+        "fsdp": dp if dp_size > 1 else None,
+        "ssm_heads": "model" if _div(cfg.d_inner // 64, model) else None,
+        # MoE dispatch intermediates: keep token-indexed tensors DP-sharded;
+        # shard the capacity dim over DP only when EP is off. Measured both
+        # ways (§Perf A/B): without EP, an unsharded [E, C, D] buffer
+        # replicates (all-gather pathology — mixtral 548 s collective term);
+        # under EP, dp-sharding the capacity dim makes GSPMD reshard the
+        # token->slot scatter across both axes and regresses 4-5x.
+        "tokens": dp if dp_size > 1 else None,
+        "expert_cap": None if ep else (dp if dp_size > 1 else None),
+    }
+    return rules
+
+
+def fallbacks(cfg, mesh, *, batch: int) -> List[str]:
+    """Human-readable list of rules that degraded to replication."""
+    r = activation_rules(cfg, mesh, batch=batch)
+    out = []
+    model = mesh.shape.get("model", 1)
+    if r["heads"] is None and cfg.num_heads:
+        out.append(f"heads {cfg.num_heads} !% model {model} -> replicated "
+                   "attention heads (batch-sharded attention)")
+    if r["kv_heads"] is None and cfg.num_kv_heads:
+        out.append(f"kv_heads {cfg.num_kv_heads} !% model {model} -> "
+                   "replicated KV heads")
+    if r["vocab"] is None:
+        out.append(f"vocab {cfg.vocab_size} !% model {model} -> replicated "
+                   "embedding")
+    if cfg.num_experts and r["experts"] is None:
+        out.append(f"experts {cfg.num_experts} !% model {model} -> "
+                   "expert-internal TP instead of EP")
+    if r["batch"] is None:
+        out.append(f"batch {batch} too small for DP -> replicated batch")
+    return out
+
+
+# ------------------------------------------------------------ params ----
+def _pad_lead(spec_dims: Tuple, extra: int) -> P:
+    return P(*([None] * extra + list(spec_dims)))
+
+
+def param_pspec(path_keys: List[str], shape: Tuple[int, ...], cfg, mesh,
+                *, serve: bool, rules: Dict) -> P:
+    """PartitionSpec for one parameter leaf, identified by its path."""
+    name = path_keys[-1]
+    parent = path_keys[-2] if len(path_keys) >= 2 else ""
+    in_moe = "moe" in path_keys and parent not in REPL_PARENTS \
+        and "shared" not in path_keys
+    ax = dict(mesh.shape)
+    model = ax.get("model", 1)
+    fsdp = rules.get("fsdp")
+    ep_axis = rules.get("experts")
+
+    def fits(dim_size, axis) -> Optional[object]:
+        if axis is None:
+            return None
+        size = int(np.prod([ax[a] for a in axis])) \
+            if isinstance(axis, tuple) else ax[axis]
+        return axis if _div(dim_size, size) else None
+
+    if name == "table":                      # embedding [V, D]
+        return P(fits(shape[0], rules.get("vocab")), None)
+
+    if name in ("w4", "w2", "w1"):           # packed [*, Kp, N]
+        extra = len(shape) - 2
+        if in_moe:
+            e_ax = fits(shape[extra - 1], ep_axis)
+            # EP owns the model axis -> per-expert packed weights replicate
+            # within the expert shard; otherwise shard N over model.
+            n_ax = None if e_ax is not None else fits(shape[-1], "model")
+            return _pad_lead((e_ax, None, n_ax), extra - 1)
+        return _pad_lead((None, fits(shape[-1], "model")), extra)
+
+    if name == "w":
+        if parent in REPL_PARENTS or parent == "lm_head":
+            if parent == "lm_head":          # [D, V]
+                return P(fits(shape[-2], fsdp),
+                         fits(shape[-1], rules.get("vocab")))
+            return P(None, None)
+        col = parent in COL_PARENTS
+        k_ax = fits(shape[-2], fsdp if col else "model")
+        n_ax = fits(shape[-1], "model" if col else fsdp)
+        if serve:
+            k_ax, n_ax = None, fits(shape[-1], "model")
+        extra = len(shape) - 2
+        if in_moe and extra >= 1:            # [L, E, K, N] or [E, K, N]
+            e_ax = fits(shape[extra - 1], ep_axis)
+            if e_ax is not None:             # EP: model is taken by experts
+                k_ax = fits(shape[-2], fsdp)
+                n_ax = None
+            return _pad_lead((e_ax, k_ax, n_ax), extra - 1)
+        return _pad_lead((k_ax, n_ax), extra)
+
+    if name == "b":
+        col = parent in COL_PARENTS or parent in ("attn",)
+        n_ax = fits(shape[-1], "model" if (col or serve) else fsdp)
+        if parent in REPL_PARENTS or parent == "lm_head":
+            n_ax = None
+        extra = len(shape) - 1
+        if in_moe and extra >= 1:
+            e_ax = fits(shape[extra - 1], ep_axis)
+            return _pad_lead((e_ax, n_ax), extra - 1)
+        return _pad_lead((n_ax,), extra)
+
+    if name in ("conv_w", "conv_b"):         # [.., K, C] / [.., C]
+        c_ax = fits(shape[-1], "model")
+        return _pad_lead((c_ax,), len(shape) - 1) if name == "conv_b" \
+            else _pad_lead((None, c_ax), len(shape) - 2)
+
+    # s, pbits, pbits_sorted, wscale, perm, norms, A_log, D, dt_bias, ...
+    return P(*([None] * len(shape)))
+
+
+def tree_pspecs(tree, cfg, mesh, *, serve: bool, rules: Dict):
+    """Map a pytree of arrays/ShapeDtypeStructs to PartitionSpecs."""
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return param_pspec(keys, tuple(leaf.shape), cfg, mesh, serve=serve,
+                           rules=rules)
+    return jax.tree_util.tree_map_with_path(one, tree,
+                                            is_leaf=lambda x: x is None)
+
+
+def tree_shardings(tree, cfg, mesh, *, serve: bool, rules: Dict):
+    specs = tree_pspecs(tree, cfg, mesh, serve=serve, rules=rules)
+    return jax.tree.map(lambda s: None if s is None
+                        else NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def validate_pspecs(tree, specs, mesh) -> List[str]:
+    """Check every sharded dim divides evenly; returns violations."""
+    ax = dict(mesh.shape)
+    bad = []
+
+    def one(path, leaf, spec):
+        if leaf is None or spec is None:
+            return
+        for d, s in enumerate(spec):
+            if s is None:
+                continue
+            size = int(np.prod([ax[a] for a in s])) \
+                if isinstance(s, tuple) else ax[s]
+            if leaf.shape[d] % size:
+                bad.append(f"{jax.tree_util.keystr(path)} dim{d} "
+                           f"{leaf.shape[d]} !% {size}")
+
+    jax.tree_util.tree_map_with_path(one, tree, specs,
+                                     is_leaf=lambda x: x is None)
+    return bad

@@ -1,0 +1,150 @@
+"""ShapeDtypeStruct stand-ins (no allocation) for every model input, state,
+and cache — the inputs to the multi-pod dry-run, plus the step functions it
+lowers.
+
+SHAPES: the assigned input-shape set. train_* lowers train_step;
+prefill_* lowers the forward prefill; decode_*/long_* lower serve_step
+(one new token against a KV cache of seq_len — ring-bounded to the window
+for SWA archs, O(1) state for SSM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import state as state_lib
+
+# Archs whose fp32 optimizer state exceeds 16 GiB/chip at 256 chips run the
+# reduced-precision-moments configuration (DESIGN.md §4).
+LOW_MEM_OPT_THRESHOLD = 200e9
+
+
+def train_config_for(arch: str, mesh) -> state_lib.TrainConfig:
+    cfg = get_config(arch)
+    moment_dtype = "bfloat16" if cfg.param_count() > LOW_MEM_OPT_THRESHOLD \
+        else "float32"
+    return state_lib.TrainConfig(
+        num_microbatches=microbatching(arch, mesh),
+        adamw=adamw.AdamWConfig(moment_dtype=moment_dtype))
+
+SD = jax.ShapeDtypeStruct
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k needs sub-quadratic attention: run for SSM/hybrid/SWA archs,
+# skip for pure full-attention archs (DESIGN.md §5).
+LONG_OK = {"mamba2-2.7b", "jamba-1.5-large-398b", "h2o-danube-1.8b",
+           "mixtral-8x22b"}
+
+
+def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return ("pure full-attention arch: 500k decode cache is "
+                "O(seq) with quadratic-history attention — skipped per "
+                "task brief (see DESIGN.md §5)")
+    return None
+
+
+def serve_quant(cfg):
+    return dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, mode="serve"))
+
+
+def qat_quant(cfg):
+    return dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, mode="qat"))
+
+
+def batch_specs(arch: str, shape: str) -> Dict[str, SD]:
+    """Training / prefill batch inputs."""
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    specs = {"tokens": SD((b, s), jnp.int32), "labels": SD((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["positions"] = SD((3, b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = SD((b, s, cfg.frontend_dim), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(arch: str, shape: str) -> Dict:
+    """serve_step inputs: packed params (from eval_shape), KV/SSM cache of
+    seq_len, one token per sequence."""
+    cfg = serve_quant(get_config(arch))
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    cache = lm.init_cache(cfg, b, s, jnp.bfloat16,
+                          enc_len=1504 if cfg.family == "audio" else 0,
+                          specs=True)
+    return {
+        "cache": cache,
+        "tokens": SD((b,), jnp.int32),
+        "pos": SD((b,), jnp.int32),
+    }
+
+
+def param_specs(arch: str, *, serve: bool):
+    cfg = serve_quant(get_config(arch)) if serve else qat_quant(
+        get_config(arch))
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg)), cfg
+
+
+def train_state_specs(arch: str, tcfg: state_lib.TrainConfig):
+    cfg = qat_quant(get_config(arch))
+
+    def build():
+        return state_lib.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+
+    return jax.eval_shape(build), cfg
+
+
+def microbatching(arch: str, mesh) -> int:
+    """Grad-accum depth for train_4k: per-device microbatch of 1 for the
+    big archs, 2 mid, 4 small."""
+    cfg = get_config(arch)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    per_dev = SHAPES["train_4k"]["batch"] // dp
+    mb_size = 1 if cfg.d_model >= 6144 else (2 if cfg.d_model >= 2048 else 4)
+    return max(1, per_dev // min(mb_size, per_dev))
+
+
+# ------------------------------------------------------ step functions ----
+def make_train_step(cfg, tcfg: state_lib.TrainConfig):
+    def step(state, batch, rng):
+        return state_lib.train_step(state, batch, cfg, tcfg, rng)
+    return step
+
+
+def make_prefill_step(cfg):
+    """Inference prefill: forward over the full prompt with serve-mode
+    (packed) weights; returns last-position logits."""
+    def step(params, batch):
+        hidden, _ = lm.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), frames=batch.get("frames"),
+            positions=batch.get("positions"))
+        return lm.logits(params, cfg, hidden[:, -1])
+    return step
+
+
+def make_serve_step(cfg):
+    def step(params, cache, tokens, pos):
+        return lm.decode_step(params, cfg, cache, tokens, pos)
+    return step

@@ -1,0 +1,1 @@
+from . import attention, blocks, common, lm, mlp, moe, shard, ssm

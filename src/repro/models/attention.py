@@ -1,0 +1,244 @@
+"""GQA attention: RoPE / M-RoPE, sliding windows, chunked prefill, decode.
+
+Memory posture (matters for the 32k-prefill dry-run cells): above
+``CHUNK_THRESHOLD`` query positions, attention runs as a lax.map over query
+blocks — each step sees the full KV (or, for sliding-window, a
+dynamic-sliced KV band, which also removes the out-of-window FLOPs), so the
+transient score tensor is [B, H, q_blk, T] instead of [B, H, S, T]. Blocks
+are independent (exact softmax per step, no online-softmax carry), so remat
+of the body keeps backward memory bounded too.
+
+All projections are SmolLinear (the paper's technique applies to every
+attention matmul); GQA KV heads are never materialized to H (grouped
+einsum).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smol
+from repro.core.qtypes import QuantConfig
+from .common import apply_rope
+from .shard import shard
+
+CHUNK_THRESHOLD = 2048
+Q_BLOCK = 512
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, qcfg: QuantConfig, *, use_bias: bool = False,
+              dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": smol.linear_init(ks[0], d_model, num_heads * head_dim, qcfg,
+                               use_bias=use_bias, dtype=dtype),
+        "wk": smol.linear_init(ks[1], d_model, num_kv_heads * head_dim, qcfg,
+                               use_bias=use_bias, dtype=dtype),
+        "wv": smol.linear_init(ks[2], d_model, num_kv_heads * head_dim, qcfg,
+                               use_bias=use_bias, dtype=dtype),
+        "wo": smol.linear_init(ks[3], num_heads * head_dim, d_model, qcfg,
+                               use_bias=use_bias, dtype=dtype),
+    }
+
+
+def _proj_qkv(params, x, xkv, num_heads, num_kv_heads, head_dim, qcfg, rng):
+    rngs = [None] * 3 if rng is None else list(jax.random.split(rng, 3))
+    b, s = x.shape[:2]
+    t = xkv.shape[1]
+    q = smol.linear_apply(params["wq"], x, qcfg, rngs[0])
+    k = smol.linear_apply(params["wk"], xkv, qcfg, rngs[1])
+    v = smol.linear_apply(params["wv"], xkv, qcfg, rngs[2])
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, t, num_kv_heads, head_dim)
+    v = v.reshape(b, t, num_kv_heads, head_dim)
+    return (shard(q, "batch", "seq", "heads", None),
+            shard(k, "batch", "seq", "kv_heads", None),
+            shard(v, "batch", "seq", "kv_heads", None))
+
+
+def _sdpa(q, k, v, mask):
+    """q [B,S,Hk,G,D], k/v [B,T,Hk,D], mask [B,1,1,S,T] or None -> [B,S,Hk,G,D].
+    fp32 scores/softmax."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / np.sqrt(dh))
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    """[B,Sq],[B,Sk] -> bool [B,1,1,Sq,Sk] (True = attend)."""
+    m = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    m &= k_pos[:, None, :] >= 0
+    return m[:, None, None]
+
+
+def full_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                   window: Optional[int]):
+    """Dense path (short sequences / cross attention)."""
+    mask = _causal_mask(q_pos, k_pos, window) if causal else None
+    return _sdpa(q, k, v, mask)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                      window: Optional[int], q_block: int = Q_BLOCK):
+    """lax.map over query blocks. For sliding windows the KV is
+    dynamic-sliced to the [lo, lo + window + q_block) band per block, which
+    makes the FLOPs O(S * window) — exact SWA cost."""
+    b, s, hk, g, d = q.shape
+    t = k.shape[1]
+    qb = q_block if s % q_block == 0 else int(np.gcd(s, q_block))
+    nq = s // qb
+    banded = causal and window is not None and (window + qb) < t
+    band = None
+    if banded:
+        band = int(np.ceil((window + qb) / qb)) * qb     # static band width
+
+    def one_block(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, axis=1)
+        qpi = jax.lax.dynamic_slice_in_dim(q_pos, i * qb, qb, axis=1)
+        if banded:
+            lo = jnp.maximum(i * qb + qb - band, 0)
+            ki = jax.lax.dynamic_slice_in_dim(k, lo, band, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, lo, band, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(k_pos, lo, band, axis=1)
+        else:
+            ki, vi, kpi = k, v, k_pos
+        mask = _causal_mask(qpi, kpi, window) if causal else None
+        return _sdpa(qi, ki, vi, mask)
+
+    out = jax.lax.map(one_block, jnp.arange(nq))          # [nq,B,qb,Hk,G,D]
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, hk, g, d)
+
+
+def attn_apply(params, x, positions, *, num_heads: int, num_kv_heads: int,
+               head_dim: int, qcfg: QuantConfig, rng=None,
+               rope_theta: float = 1e4, mrope_sections=None,
+               window: Optional[int] = None, causal: bool = True,
+               cross_x=None, q_block: int = Q_BLOCK, use_rope: bool = True):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    xkv = x if cross_x is None else cross_x
+    rng_o = None
+    if rng is not None:
+        rng, rng_o = jax.random.split(rng)
+    q, k, v = _proj_qkv(params, x, xkv, num_heads, num_kv_heads, head_dim,
+                        qcfg, rng)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    if cross_x is None:
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta, mrope_sections)
+            k = apply_rope(k, positions, rope_theta, mrope_sections)
+        k_pos = pos2d
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(xkv.shape[1])[None],
+                                 (b, xkv.shape[1]))
+    g = num_heads // num_kv_heads
+    q = q.reshape(b, s, num_kv_heads, g, head_dim)
+    is_causal = causal and cross_x is None
+    if s > q_block and s > CHUNK_THRESHOLD:
+        # cross attention chunks too (mask-free blocks): keeps the score
+        # transient at [B, H, q_blk, T] for 32k x 32k enc-dec prefill.
+        o = chunked_attention(q, k, v, pos2d, k_pos, causal=is_causal,
+                              window=window, q_block=q_block)
+    else:
+        o = full_attention(q, k, v, pos2d, k_pos, causal=is_causal,
+                           window=window)
+    o = o.reshape(b, s, num_heads * head_dim)
+    return smol.linear_apply(params["wo"], o, qcfg, rng_o)
+
+
+# ------------------------------------------------------------- decode ----
+def init_kv_cache(batch: int, cache_len: int, num_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def kv_cache_specs(batch: int, cache_len: int, num_kv_heads: int,
+                   head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    sd = jax.ShapeDtypeStruct
+    return {
+        "k": sd((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": sd((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "pos": sd((batch, cache_len), jnp.int32),
+    }
+
+
+def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
+                num_kv_heads: int, head_dim: int, qcfg: QuantConfig,
+                rope_theta: float = 1e4, mrope_sections=None,
+                window: Optional[int] = None, cross_kv=None,
+                use_rope: bool = True, layer_idx=None):
+    """One-token decode. x [B,1,D]; pos [B] absolute position; ring-buffer
+    write at pos % cache_len (cache_len == window for SWA archs).
+
+    layer_idx: when given, cache leaves are the STACKED [L, ...] buffers
+    carried through the decode scan — the new K/V are scattered in place at
+    [layer_idx, b, slot] (one token's bytes) instead of rebuilding a full
+    per-layer cache slice (67 MB/layer for the 32k cells — the dominant
+    decode write traffic, §Perf C3).
+
+    cross_kv: optional precomputed (k, v, k_pos) for encoder-decoder cross
+    attention (whisper) — used as-is, no cache update.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _proj_qkv(params, x, x, num_heads, num_kv_heads,
+                                head_dim, qcfg, None)
+    posb = pos[:, None] if pos.ndim == 1 else pos            # [B,1]
+    if mrope_sections is not None:
+        pos_r = jnp.broadcast_to(posb[None], (3,) + posb.shape)
+    else:
+        pos_r = posb
+    if use_rope:
+        q = apply_rope(q, pos_r, rope_theta, mrope_sections)
+    if cross_kv is None:
+        if use_rope:
+            k_new = apply_rope(k_new, pos_r, rope_theta, mrope_sections)
+        stacked = layer_idx is not None
+        cache_len = cache["k"].shape[2 if stacked else 1]
+        slot = (posb % cache_len).astype(jnp.int32)           # [B,1]
+        bidx = jnp.arange(b)[:, None]
+        kd, vd = cache["k"].dtype, cache["v"].dtype
+        if stacked:
+            k_st = cache["k"].at[layer_idx, bidx, slot].set(
+                k_new.astype(kd))
+            v_st = cache["v"].at[layer_idx, bidx, slot].set(
+                v_new.astype(vd))
+            kpos_st = cache["pos"].at[layer_idx, bidx, slot].set(posb)
+            new_cache = {"k": k_st, "v": v_st, "pos": kpos_st}
+            kk = jax.lax.dynamic_index_in_dim(k_st, layer_idx, 0, False)
+            vv = jax.lax.dynamic_index_in_dim(v_st, layer_idx, 0, False)
+            kp = jax.lax.dynamic_index_in_dim(kpos_st, layer_idx, 0, False)
+        else:
+            k = cache["k"].at[bidx, slot].set(k_new.astype(kd))
+            v = cache["v"].at[bidx, slot].set(v_new.astype(vd))
+            kpos = cache["pos"].at[bidx, slot].set(posb)
+            new_cache = {"k": shard(k, "batch", "seq_shard", None, None),
+                         "v": shard(v, "batch", "seq_shard", None, None),
+                         "pos": kpos}
+            kk, vv, kp = new_cache["k"], new_cache["v"], kpos
+    else:
+        kk, vv, kp = cross_kv
+        new_cache = cache
+    g = num_heads // num_kv_heads
+    qr = q.reshape(b, 1, num_kv_heads, g, head_dim)
+    mask = _causal_mask(posb, kp, window) if cross_kv is None else None
+    o = _sdpa(qr, kk.astype(qr.dtype), vv.astype(qr.dtype), mask)
+    o = o.reshape(b, 1, num_heads * head_dim)
+    y = smol.linear_apply(params["wo"], o, qcfg, None)
+    return y, new_cache

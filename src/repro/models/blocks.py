@@ -1,0 +1,214 @@
+"""Decoder/encoder block assembly.
+
+Block kinds (cfg.layer_plan()):
+  attn_mlp / attn_moe / mamba / mamba_mlp / mamba_moe — pre-norm residual
+  hybrid_unit — Jamba: cfg.attn_every sub-blocks (1 attn per unit, MoE every
+                moe_every-th ffn), scanned as one repeating unit
+  enc — bidirectional (whisper encoder)
+  dec — causal self-attn + cross-attn + FFN (whisper decoder)
+Suffix "@dense0" overrides d_ff with cfg.dense_d_ff (DeepSeekMoE's first
+dense layer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtypes import QuantConfig
+from . import attention, mlp as mlp_lib, moe as moe_lib, ssm as ssm_lib
+from .common import layer_norm, layer_norm_init, rms_norm, rms_norm_init
+
+
+def _norm_init(cfg):
+    return layer_norm_init(cfg.d_model) if cfg.norm == "ln" \
+        else rms_norm_init(cfg.d_model)
+
+
+def _norm(cfg, params, x):
+    fn = layer_norm if cfg.norm == "ln" else rms_norm
+    return fn(params, x, cfg.norm_eps)
+
+
+def _dff(kind: str, cfg) -> int:
+    return cfg.dense_d_ff if kind.endswith("@dense0") and cfg.dense_d_ff \
+        else cfg.d_ff
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def block_init(key, kind: str, cfg, qcfg: QuantConfig) -> Dict:
+    base = kind.split("@")[0]
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p: Dict = {}
+    if base == "hybrid_unit":
+        subs = cfg.hybrid_unit_kinds()
+        return {f"sub{i}": block_init(ks[i % 8] if i < 8 else ks[0],
+                                      sub, cfg, qcfg)
+                for i, sub in enumerate(subs)}
+    if "attn" in base or base in ("enc", "dec"):
+        p["ln_attn"] = _norm_init(cfg)
+        p["attn"] = attention.attn_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+            qcfg, use_bias=cfg.attn_bias, dtype=dt)
+    if base == "dec":
+        p["ln_cross"] = _norm_init(cfg)
+        p["cross"] = attention.attn_init(
+            ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+            qcfg, use_bias=cfg.attn_bias, dtype=dt)
+    if "mamba" in base:
+        p["ln_mixer"] = _norm_init(cfg)
+        p["mamba"] = ssm_lib.mamba2_init(ks[2], cfg.d_model, cfg.ssm_state,
+                                         qcfg, expand=cfg.ssm_expand,
+                                         dtype=dt)
+    if "moe" in base:
+        p["ln_ffn"] = _norm_init(cfg)
+        p["moe"] = moe_lib.moe_init(
+            ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.top_k, qcfg,
+            num_shared=cfg.num_shared_experts, act=cfg.mlp_act, dtype=dt)
+    elif "mlp" in base or base in ("enc", "dec"):
+        p["ln_ffn"] = _norm_init(cfg)
+        p["mlp"] = mlp_lib.mlp_init(ks[4], cfg.d_model, _dff(kind, cfg),
+                                    qcfg, act=cfg.mlp_act,
+                                    use_bias=cfg.attn_bias, dtype=dt)
+    return p
+
+
+def _attn_kwargs(cfg, qcfg):
+    return dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.hd, qcfg=qcfg, rope_theta=cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections, window=cfg.window,
+                use_rope=cfg.family != "audio")
+
+
+def block_apply(params: Dict, kind: str, x, positions, cfg,
+                qcfg: QuantConfig, rng=None, *, cross_x=None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (x, moe_aux_loss)."""
+    base = kind.split("@")[0]
+    aux = jnp.zeros((), jnp.float32)
+    if base == "hybrid_unit":
+        # Each sub-block is its own remat unit: the backward pass holds one
+        # sublayer's (all-gathered) weights at a time instead of all
+        # attn_every of them — required to fit the 398B hybrid's MoE units.
+        subs = cfg.hybrid_unit_kinds()
+        policy = jax.checkpoint_policies.nothing_saveable
+
+        for i, sub in enumerate(subs):
+            r = None if rng is None else jax.random.fold_in(rng, i)
+
+            def sub_fn(p_, x_, r_, _sub=sub):
+                return block_apply(p_, _sub, x_, positions, cfg, qcfg, r_)
+
+            if cfg.remat != "none":
+                sub_fn = jax.checkpoint(sub_fn, policy=policy)
+            x, a = sub_fn(params[f"sub{i}"], x, r)
+            aux = aux + a
+        return x, aux
+
+    rngs = [None] * 4 if rng is None else list(jax.random.split(rng, 4))
+    if "attn" in base or base in ("enc", "dec"):
+        h = _norm(cfg, params["ln_attn"], x)
+        a = attention.attn_apply(
+            params["attn"], h, positions, rng=rngs[0],
+            causal=(base != "enc"), q_block=cfg.q_block,
+            **_attn_kwargs(cfg, qcfg))
+        x = x + a
+    if base == "dec":
+        h = _norm(cfg, params["ln_cross"], x)
+        a = attention.attn_apply(params["cross"], h, positions,
+                                 rng=rngs[1], cross_x=cross_x,
+                                 q_block=cfg.q_block,
+                                 **_attn_kwargs(cfg, qcfg))
+        x = x + a
+    if "mamba" in base:
+        h = _norm(cfg, params["ln_mixer"], x)
+        x = x + ssm_lib.mamba2_apply(params["mamba"], h, qcfg, rngs[2],
+                                     d_state=cfg.ssm_state,
+                                     expand=cfg.ssm_expand,
+                                     chunk=cfg.ssm_chunk)
+    if "moe" in base:
+        h = _norm(cfg, params["ln_ffn"], x)
+        y, a = moe_lib.moe_apply(params["moe"], h, qcfg, rngs[3],
+                                 num_experts=cfg.num_experts,
+                                 top_k=cfg.top_k, act=cfg.mlp_act)
+        x = x + y
+        aux = aux + a
+    elif "mlp" in base or base in ("enc", "dec"):
+        h = _norm(cfg, params["ln_ffn"], x)
+        x = x + mlp_lib.mlp_apply(params["mlp"], h, qcfg, rngs[3],
+                                  act=cfg.mlp_act)
+    return x, aux
+
+
+# --------------------------------------------------------------- decode ----
+def block_cache_init(kind: str, cfg, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16, *, specs: bool = False) -> Dict:
+    base = kind.split("@")[0]
+    kv = attention.kv_cache_specs if specs else attention.init_kv_cache
+    sm = ssm_lib.ssm_cache_specs if specs else ssm_lib.init_ssm_cache
+    if base == "hybrid_unit":
+        return {f"sub{i}": block_cache_init(sub, cfg, batch, cache_len,
+                                            dtype, specs=specs)
+                for i, sub in enumerate(cfg.hybrid_unit_kinds())}
+    c: Dict = {}
+    if "attn" in base or base == "dec":
+        clen = min(cache_len, cfg.window) if cfg.window else cache_len
+        c["kv"] = kv(batch, clen, cfg.num_kv_heads, cfg.hd, dtype)
+    if "mamba" in base:
+        c["ssm"] = sm(batch, cfg.d_model, cfg.ssm_state,
+                      expand=cfg.ssm_expand, dtype=dtype)
+    return c
+
+
+def block_decode(params: Dict, kind: str, x, cache: Dict, pos, cfg,
+                 qcfg: QuantConfig, *, cross_kv=None, layer_idx=None
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x [B, 1, D]; pos [B]. With layer_idx, cache leaves
+    are stacked [L, ...] scan-carry buffers updated in place."""
+    base = kind.split("@")[0]
+    if base == "hybrid_unit":
+        new_cache = {}
+        for i, sub in enumerate(cfg.hybrid_unit_kinds()):
+            x, new_cache[f"sub{i}"] = block_decode(
+                params[f"sub{i}"], sub, x, cache[f"sub{i}"], pos, cfg, qcfg,
+                layer_idx=layer_idx)
+        return x, new_cache
+
+    new_cache = dict(cache)
+    if "attn" in base or base == "dec":
+        h = _norm(cfg, params["ln_attn"], x)
+        a, new_kv = attention.attn_decode(params["attn"], h, cache["kv"],
+                                          pos, layer_idx=layer_idx,
+                                          **_attn_kwargs(cfg, qcfg))
+        new_cache["kv"] = new_kv
+        x = x + a
+    if base == "dec" and cross_kv is not None:
+        h = _norm(cfg, params["ln_cross"], x)
+        a, _ = attention.attn_decode(params["cross"], h, None, pos,
+                                     cross_kv=cross_kv,
+                                     **_attn_kwargs(cfg, qcfg))
+        x = x + a
+    if "mamba" in base:
+        h = _norm(cfg, params["ln_mixer"], x)
+        y, new_ssm = ssm_lib.mamba2_decode(params["mamba"], h, cache["ssm"],
+                                           qcfg, d_state=cfg.ssm_state,
+                                           expand=cfg.ssm_expand,
+                                           layer_idx=layer_idx)
+        new_cache["ssm"] = new_ssm
+        x = x + y
+    if "moe" in base:
+        h = _norm(cfg, params["ln_ffn"], x)
+        y, _ = moe_lib.moe_apply(params["moe"], h, qcfg, None,
+                                 num_experts=cfg.num_experts,
+                                 top_k=cfg.top_k, act=cfg.mlp_act)
+        x = x + y
+    elif "mlp" in base or base in ("enc", "dec"):
+        h = _norm(cfg, params["ln_ffn"], x)
+        x = x + mlp_lib.mlp_apply(params["mlp"], h, qcfg, None,
+                                  act=cfg.mlp_act)
+    return x, new_cache

@@ -1,0 +1,197 @@
+"""The paper's own model family: small CNNs (MobileNet/ShuffleNet-style
+blocks) with SONIQ quantization on every conv — used by the Table I /
+Fig. 7-9 reproduction benchmarks on synthetic CIFAR-like data.
+
+Conv weights [kh, kw, Cin, Cout] are quantized along Cin — the paper's
+input-channel granularity (all weights and the activations they multiply
+sharing an input-channel index share one precision, Obs. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import noise as noise_lib
+from repro.core import quant, smol
+from repro.core.qtypes import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    num_classes: int = 10
+    in_channels: int = 3
+    channels: Tuple[int, ...] = (16, 32)
+    blocks_per_stage: int = 1
+    quant: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig(mode="qat"))
+
+
+def _g(cin: int, qcfg: QuantConfig) -> int:
+    return smol.eff_group_size(cin, qcfg.group_size)
+
+
+def conv_init(key, kh, kw, cin, cout, qcfg: QuantConfig, *,
+              quantized=True) -> Dict:
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) \
+        * (1.0 / np.sqrt(kh * kw * cin))
+    p = {"w": w}
+    if quantized and qcfg.mode == "noise":
+        p["s"] = noise_lib.init_s(smol.num_groups(cin, _g(cin, qcfg)),
+                                  qcfg.p_init)
+    elif quantized and qcfg.mode == "qat":
+        p["pbits"] = jnp.asarray(smol.init_pbits_from_mix(cin, qcfg))
+    return p
+
+
+def _quant_w_conv(w, pbits, qcfg, g):
+    """fake-quant along Cin of [kh,kw,Cin,Cout]."""
+    wt = jnp.moveaxis(w, 2, -1)                       # [kh,kw,Cout,Cin]
+    if qcfg.scale_mode == "none":
+        sw = 1.0
+    else:
+        cin = w.shape[2]
+        m = jnp.max(jnp.abs(wt.reshape(-1, cin)
+                            .reshape(-1, cin // g, g)), axis=(0, 2))
+        sw = jax.lax.stop_gradient(
+            jnp.maximum(m, 1e-6) / quant._static_grid_max(4))
+    wq = quant.fake_quant(wt, pbits, sw, g)
+    return jnp.moveaxis(wq, -1, 2)
+
+
+def conv_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
+               stride=1, groups=1):
+    """x [B,H,W,Cin] -> [B,H',W',Cout]; SONIQ along Cin."""
+    w = params["w"]
+    cin = w.shape[2] * groups
+    g = _g(w.shape[2], qcfg)
+    mode = qcfg.mode if ("s" in params or "pbits" in params) else "fp"
+
+    if mode == "noise":
+        k1, k2 = jax.random.split(rng)
+        wf = jnp.moveaxis(w, 2, 0).reshape(w.shape[2], -1)
+        # abs-max -> 1.0 normalization: keeps the +-(2 - sigma) clip from
+        # biting during the search (see smol.linear_apply noise branch).
+        swn = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(
+            wf.reshape(wf.shape[0] // g, g, -1)), axis=(1, 2)), 1e-6))
+        sfull = jnp.repeat(swn, g, total_repeat_length=wf.shape[0])[:, None]
+        wn = noise_lib.inject_weight_noise(wf / sfull, params["s"], k1, g)
+        wn = wn * sfull
+        w = jnp.moveaxis(wn.reshape(w.shape[2], w.shape[0], w.shape[1],
+                                    w.shape[3]), 0, 2)
+        if qcfg.quantize_activations and groups == 1:
+            sx = quant.abs_max_scale(x) if qcfg.act_scale_mode != "none" \
+                else 1.0
+            x = noise_lib.inject_act_noise(x, params["s"], k2, sx, g)
+    elif mode == "qat":
+        pbits = params["pbits"].astype(jnp.float32)
+        w = _quant_w_conv(w, pbits, qcfg, g)
+        if qcfg.quantize_activations and groups == 1:
+            sx = quant.abs_max_scale(x) if qcfg.act_scale_mode != "none" \
+                else 1.0
+            x = quant.fake_quant(x, pbits, sx, g)
+
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.float32)
+
+
+def cnn_init(key, cfg: CNNConfig) -> Dict:
+    qcfg = cfg.quant
+    ks = iter(jax.random.split(key, 64))
+    p: Dict = {"stem": conv_init(next(ks), 3, 3, cfg.in_channels,
+                                 cfg.channels[0], qcfg, quantized=False)}
+    stages = []
+    cin = cfg.channels[0]
+    for cout in cfg.channels:
+        blocks = []
+        for _ in range(cfg.blocks_per_stage):
+            blocks.append({
+                # depthwise 3x3 (paper §III-C territory) + pointwise 1x1
+                "dw": conv_init(next(ks), 3, 3, 1, cin, qcfg,
+                                quantized=False),
+                "pw": conv_init(next(ks), 1, 1, cin, cout, qcfg),
+                "bn_g": jnp.ones((cout,)), "bn_b": jnp.zeros((cout,)),
+            })
+            cin = cout
+        stages.append(blocks)
+    p["stages"] = stages
+    p["head"] = smol.linear_init(next(ks), cin, cfg.num_classes, qcfg,
+                                 quantized=False)
+    return p
+
+
+def cnn_apply(params: Dict, x, cfg: CNNConfig, rng=None):
+    qcfg = cfg.quant
+    r = iter(jax.random.split(rng, 64)) if rng is not None else None
+
+    def nr():
+        return next(r) if r is not None else None
+
+    h = jax.nn.relu(conv_apply(params["stem"], x, qcfg, nr()))
+    for si, blocks in enumerate(params["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if bi == 0 and si > 0 else 1
+            g = h.shape[-1]
+            h2 = conv_apply(blk["dw"], h, qcfg, nr(), stride=stride,
+                            groups=g)
+            h2 = conv_apply(blk["pw"], h2, qcfg, nr())
+            mu = jnp.mean(h2, axis=(0, 1, 2))
+            var = jnp.var(h2, axis=(0, 1, 2))
+            h2 = (h2 - mu) * jax.lax.rsqrt(var + 1e-5) * blk["bn_g"] \
+                + blk["bn_b"]
+            h = jax.nn.relu(h2)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return smol.linear_apply(params["head"], pooled, qcfg, nr())
+
+
+def xent_loss(params, batch, cfg: CNNConfig, rng=None):
+    logits = cnn_apply(params, batch["x"], cfg, rng)
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    if cfg.quant.mode == "noise":
+        loss = loss + cfg.quant.lam * smol.bit_penalty_of_params(params)
+    return loss, logits
+
+
+def accuracy(params, x, y, cfg: CNNConfig) -> float:
+    logits = cnn_apply(params, x, cfg, None)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+
+
+def bits_per_param(params, qcfg: QuantConfig) -> float:
+    """Average bpp over quantized conv/linear weights (paper's Bpp)."""
+    tot_bits = tot = 0
+
+    def walk(node):
+        nonlocal tot_bits, tot
+        if isinstance(node, dict):
+            if "w" in node and ("pbits" in node or "s" in node):
+                w = node["w"]
+                cin = w.shape[-2] if w.ndim == 2 else w.shape[2]
+                per = (w.size // cin)
+                if "pbits" in node:
+                    pb = np.asarray(node["pbits"], np.float64)
+                else:
+                    from repro.core import patterns
+                    s = np.asarray(node["s"])
+                    raw = 1 + np.log2(1 + np.exp(-s))
+                    pb = np.clip(np.round(raw), 1, 8)
+                g = cin // pb.shape[-1]
+                tot_bits += float(pb.sum()) * g * per
+                tot += w.size
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return tot_bits / max(tot, 1)

@@ -1,0 +1,104 @@
+"""Shared model components: norms, embeddings, rotary position encodings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .shard import shard
+
+
+def rms_norm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x, eps: float = 1e-5):
+    xf = jnp.asarray(x, jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["g"]).astype(x.dtype)
+
+
+def layer_norm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    xf = jnp.asarray(x, jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"] + params["b"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_lookup(params, tokens, compute_dtype):
+    t = shard(params["table"], "vocab", "embed").astype(compute_dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def embed_logits(params, x):
+    """Tied readout: x [..., D] @ table.T -> [..., V] (fp32)."""
+    t = shard(params["table"], "vocab", "embed")
+    return jax.lax.dot_general(
+        jnp.asarray(x, jnp.float32), jnp.asarray(t, jnp.float32),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4,
+               mrope_sections: Optional[tuple] = None):
+    """Rotary embedding.
+
+    x         : [B, S, H, Dh]
+    positions : [B, S] int32, or [3, B, S] for M-RoPE (temporal/height/width
+                position streams — Qwen2-VL §3; for text all three streams
+                are equal, which reduces exactly to standard RoPE).
+    """
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)   # [Dh/2]
+    if positions.ndim == 2:            # standard RoPE
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,Dh/2]
+    else:                               # M-RoPE: split freq dim into sections
+        assert mrope_sections is not None and positions.shape[0] == 3
+        secs = np.asarray(mrope_sections)
+        assert secs.sum() == dh // 2, (mrope_sections, dh)
+        parts = []
+        off = 0
+        for i, sec in enumerate(secs):
+            f = freqs[off:off + sec]
+            parts.append(positions[i][..., None].astype(jnp.float32) * f)
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)                  # [B,S,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(jnp.asarray(x, jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(max_len: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings [max_len, d]."""
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (1e4 ** (dim / d))
+    out = np.zeros((max_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]

@@ -1,0 +1,322 @@
+"""Top-level language model: init / forward / loss / decode for every
+assigned architecture (dense, MoE, VLM-backbone, SSM, hybrid, enc-dec).
+
+Layers are scanned (stacked params per plan group) with configurable remat;
+the vocabulary loss is computed in sequence chunks (rematerialized) so
+[B, S, V] logits are never resident — required for the 100k+-vocab archs at
+seq 4k. Modality frontends are stubs per the task brief: whisper consumes
+precomputed mel frames through one projection; qwen2-vl consumes precomputed
+patch/text embeddings plus M-RoPE position streams.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smol
+from repro.core.qtypes import QuantConfig
+from . import blocks
+from .common import (embed_init, embed_logits, embed_lookup, layer_norm,
+                     layer_norm_init, rms_norm, rms_norm_init,
+                     sinusoid_positions)
+from .shard import shard
+
+LOSS_CHUNK = 1024
+Z_LOSS = 1e-4
+MOE_AUX = 0.01
+
+
+def _norm_init(cfg):
+    return layer_norm_init(cfg.d_model) if cfg.norm == "ln" \
+        else rms_norm_init(cfg.d_model)
+
+
+def _norm(cfg, p, x):
+    return (layer_norm if cfg.norm == "ln" else rms_norm)(p, x, cfg.norm_eps)
+
+
+def _stacked_init(key, kind: str, count: int, cfg, qcfg) -> Dict:
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: blocks.block_init(k, kind, cfg, qcfg))(keys)
+
+
+def init_params(key, cfg) -> Dict:
+    qcfg = cfg.quant
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Dict = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+               "final_norm": _norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = smol.linear_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                        qcfg, quantized=False, dtype=dt)
+    p["groups"] = [
+        _stacked_init(jax.random.fold_in(ks[2], i), kind, count, cfg, qcfg)
+        for i, (kind, count) in enumerate(cfg.layer_plan())]
+    if cfg.encoder_layers:
+        p["enc_groups"] = [_stacked_init(ks[3], "enc", cfg.encoder_layers,
+                                         cfg, qcfg)]
+        p["enc_norm"] = _norm_init(cfg)
+        p["frontend"] = smol.linear_init(ks[4], cfg.frontend_dim,
+                                         cfg.d_model, qcfg, quantized=False,
+                                         dtype=dt)
+    return p
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_group(gparams, kind: str, x, positions, cfg, qcfg, rng,
+               cross_x=None):
+    """lax.scan over the stacked layers of one plan group."""
+    use_rng = qcfg.mode == "noise"
+
+    def blk(lp, x_, key):
+        return blocks.block_apply(lp, kind, x_, positions, cfg, qcfg,
+                                  key if use_rng else None, cross_x=cross_x)
+
+    blk = _remat(cfg, blk)
+
+    def body(carry, lp):
+        x_, key, aux = carry
+        key, sub = jax.random.split(key)
+        x_, a = blk(lp, x_, sub)
+        return (x_, key, aux + a), None
+
+    key0 = rng if rng is not None else jax.random.PRNGKey(0)
+    (x, _, aux), _ = jax.lax.scan(body, (x, key0, jnp.zeros((), jnp.float32)),
+                                  gparams)
+    return x, aux
+
+
+def encode(params, cfg, frames, rng=None):
+    """Whisper encoder: frames [B, T, frontend_dim] -> [B, T, D]."""
+    qcfg = cfg.quant
+    dt = jnp.dtype(cfg.dtype)
+    x = smol.linear_apply(params["frontend"], frames.astype(dt), qcfg)
+    x = x + sinusoid_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                           (x.shape[0], x.shape[1]))
+    for g in params["enc_groups"]:
+        x, _ = _run_group(g, "enc", x, pos, cfg, qcfg, rng)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def forward(params, cfg, *, tokens=None, embeds=None, frames=None,
+            positions=None, rng=None):
+    """Returns (hidden [B,S,D], moe_aux). Readout is applied by the loss
+    (chunked) or by `logits()`."""
+    qcfg = cfg.quant
+    dt = jnp.dtype(cfg.dtype)
+    if embeds is not None:
+        x = embeds.astype(dt)
+    else:
+        x = embed_lookup(params["embed"], tokens, dt)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = shard(x, "batch", "seq", "embed")
+
+    cross_x = None
+    if cfg.encoder_layers:
+        assert frames is not None, "encoder-decoder arch needs frames"
+        cross_x = encode(params, cfg, frames, rng)
+        x = x + sinusoid_positions(s, cfg.d_model).astype(dt)[None]
+
+    aux = jnp.zeros((), jnp.float32)
+    for gi, (g, (kind, _)) in enumerate(zip(params["groups"],
+                                            cfg.layer_plan())):
+        r = None if rng is None else jax.random.fold_in(rng, gi)
+        x, a = _run_group(g, kind, x, positions, cfg, qcfg, r,
+                          cross_x=cross_x)
+        aux = aux + a
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def _readout(params, cfg, h):
+    """h [..., D] -> fp32 logits [..., V]."""
+    if cfg.tie_embeddings:
+        return embed_logits(params["embed"], h)
+    return smol.linear_apply(params["lm_head"], h.astype(jnp.float32),
+                             cfg.quant)
+
+
+def logits(params, cfg, h):
+    return _readout(params, cfg, h)
+
+
+def lm_loss(params, cfg, hidden, labels, chunk: int = LOSS_CHUNK):
+    """Chunked (and rematerialized) softmax cross-entropy over the vocab.
+
+    labels [B, S] int32; positions with label < 0 are masked out.
+    """
+    b, s, d = hidden.shape
+    c = chunk if s % chunk == 0 else int(np.gcd(s, chunk))
+    nc = s // c
+
+    def one(chunk_idx):
+        h = jax.lax.dynamic_slice_in_dim(hidden, chunk_idx * c, c, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, chunk_idx * c, c, axis=1)
+        lg = _readout(params, cfg, h)                      # [B,c,V] fp32
+        lg = shard(lg, "batch", "seq", "vocab")
+        mask = (y >= 0).astype(jnp.float32)
+        yc = jnp.clip(y, 0)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((logz - ll) * mask)
+        zl = jnp.sum(jnp.square(logz) * mask)
+        return ce + Z_LOSS * zl, jnp.sum(mask)
+
+    one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, i):
+        tot, cnt = carry
+        l, n = one(i)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch: Dict, cfg, rng):
+    """Scalar training loss: CE + z-loss + MoE aux + (Phase I) the SONIQ bit
+    regularizer lambda * ||log2(1+e^-s)||_1."""
+    hidden, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        frames=batch.get("frames"), positions=batch.get("positions"),
+        rng=rng)
+    loss = lm_loss(params, cfg, hidden, batch["labels"])
+    loss = loss + MOE_AUX * aux
+    if cfg.quant.mode == "noise":
+        loss = loss + cfg.quant.lam * smol.bit_penalty_of_params(params)
+    return loss, {"ce": loss, "moe_aux": aux}
+
+
+# --------------------------------------------------------------- decode ----
+def _sinusoid_at(pos, d: int):
+    """Sinusoidal embedding evaluated at arbitrary positions [B] -> [B, d]."""
+    dim = jnp.arange(0, d, 2)[None, :]
+    ang = pos[:, None].astype(jnp.float32) / (1e4 ** (dim / d))
+    out = jnp.zeros((pos.shape[0], d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def _stack_cache(c, count: int, specs: bool):
+    if specs:
+        return jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((count,) + sd.shape, sd.dtype), c)
+    return jax.tree.map(lambda a: jnp.repeat(a[None], count, axis=0), c)
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
+               enc_len: int = 0, specs: bool = False) -> Dict:
+    """Decode cache for the whole model; specs=True returns
+    ShapeDtypeStructs (dry-run, no allocation)."""
+    cache: Dict = {"groups": []}
+    for kind, count in cfg.layer_plan():
+        c1 = blocks.block_cache_init(kind, cfg, batch, cache_len, dtype,
+                                     specs=specs)
+        cache["groups"].append(_stack_cache(c1, count, specs))
+    if cfg.encoder_layers:
+        t = enc_len or 1500
+        shapes = {"k": ((batch, t, cfg.num_kv_heads, cfg.hd), dtype),
+                  "v": ((batch, t, cfg.num_kv_heads, cfg.hd), dtype),
+                  "pos": ((batch, t), jnp.int32)}
+        if specs:
+            kv = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt)
+                  in shapes.items()}
+        else:
+            kv = {k: jnp.zeros(sh, dt) for k, (sh, dt) in shapes.items()}
+        cache["cross"] = _stack_cache(kv, cfg.num_layers, specs)
+    return cache
+
+
+def build_cross_cache(params, cfg, enc_out) -> Dict:
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    qcfg = cfg.quant
+    b, t, _ = enc_out.shape
+
+    def proj(layer_p):
+        k = smol.linear_apply(layer_p["cross"]["wk"], enc_out, qcfg)
+        v = smol.linear_apply(layer_p["cross"]["wv"], enc_out, qcfg)
+        return (k.reshape(b, t, cfg.num_kv_heads, cfg.hd),
+                v.reshape(b, t, cfg.num_kv_heads, cfg.hd))
+
+    ks, vs = jax.vmap(proj)(params["groups"][0])
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return {"k": ks, "v": vs,
+            "pos": jnp.repeat(pos[None], cfg.num_layers, axis=0)}
+
+
+def decode_step(params, cfg, cache: Dict, tokens, pos, *,
+                inplace_cache: bool = False):
+    """One decode step. tokens [B] int32, pos [B] int32.
+    Returns (logits [B, V] fp32, new cache).
+
+    inplace_cache: carry the stacked cache through the decode scan and
+    scatter the new token in place ([l, b, slot] — one token's bytes)
+    instead of the xs->ys per-layer rebuild. On TPU the carried scatter
+    aliases (write traffic ~0); the CPU backend legalizes bf16 scatter via
+    whole-buffer f32 converts, inverting the win — hence opt-in
+    (EXPERIMENTS.md §Perf C3)."""
+    qcfg = cfg.quant
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens[:, None], dt)   # [B,1,D]
+    if cfg.encoder_layers:
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(dt)[:, None]
+
+    new_groups = []
+    for gi, (g, (kind, count)) in enumerate(zip(params["groups"],
+                                                cfg.layer_plan())):
+        gcache = cache["groups"][gi]
+        cross = cache.get("cross")
+
+        if inplace_cache:
+            # The stacked cache rides the CARRY (updated in place at
+            # [layer_idx, b, slot]); params/cross are xs.
+            def body(carry, inp):
+                x_, cache_ = carry
+                lp, l, lcross = inp
+                ck = None
+                if lcross is not None:
+                    ck = (lcross["k"], lcross["v"], lcross["pos"])
+                x2, cache2 = blocks.block_decode(lp, kind, x_, cache_, pos,
+                                                 cfg, qcfg, cross_kv=ck,
+                                                 layer_idx=l)
+                return (x2, cache2), None
+
+            xs = (g, jnp.arange(count),
+                  cross if (cross is not None and kind == "dec") else None)
+            (x, new_cache_g), _ = jax.lax.scan(body, (x, gcache), xs)
+        else:
+            def body(x_, inp):
+                lp, lc, lcross = inp
+                ck = None
+                if lcross is not None:
+                    ck = (lcross["k"], lcross["v"], lcross["pos"])
+                x2, nc = blocks.block_decode(lp, kind, x_, lc, pos, cfg,
+                                             qcfg, cross_kv=ck)
+                return x2, nc
+
+            xs = (g, gcache,
+                  cross if (cross is not None and kind == "dec") else None)
+            x, new_cache_g = jax.lax.scan(body, x, xs)
+        new_groups.append(new_cache_g)
+    new_cache = dict(cache)
+    new_cache["groups"] = new_groups
+    x = _norm(cfg, params["final_norm"], x)
+    lg = _readout(params, cfg, x[:, 0])
+    return lg, new_cache

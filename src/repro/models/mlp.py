@@ -1,0 +1,40 @@
+"""Feed-forward blocks (SwiGLU / GELU), all matmuls SmolLinear."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import smol
+from repro.core.qtypes import QuantConfig
+from .common import activation
+from .shard import shard
+
+
+def mlp_init(key, d_model: int, d_ff: int, qcfg: QuantConfig, *,
+             act: str = "swiglu", use_bias: bool = False,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": smol.linear_init(ks[0], d_model, d_ff, qcfg,
+                                use_bias=use_bias, dtype=dtype),
+         "down": smol.linear_init(ks[1], d_ff, d_model, qcfg,
+                                  use_bias=use_bias, dtype=dtype)}
+    if act == "swiglu":
+        p["gate"] = smol.linear_init(ks[2], d_model, d_ff, qcfg,
+                                     use_bias=use_bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
+              act: str = "swiglu"):
+    rngs = [None] * 3 if rng is None else list(jax.random.split(rng, 3))
+    h = smol.linear_apply(params["up"], x, qcfg, rngs[0])
+    h = shard(h, "batch", "seq", "ff")
+    if act == "swiglu":
+        g = smol.linear_apply(params["gate"], x, qcfg, rngs[1])
+        h = jax.nn.silu(g) * h
+    else:
+        h = activation(act)(h)
+    y = smol.linear_apply(params["down"], h, qcfg, rngs[2])
+    return shard(y, "batch", "seq", "embed")

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts: top-k routing with sort-based static-capacity
+dispatch (GSPMD/EP-friendly), shared + fine-grained routed experts
+(DeepSeekMoE), Mixtral-style top-2.
+
+Dispatch: flatten (token, k) assignments, rank tokens within each expert
+via a stable argsort of expert ids, drop beyond static capacity
+C = ceil(T * top_k / E * capacity_factor), gather into [E, C, D], run
+batched expert matmuls (einsum 'ecd,edf->ecf' — one grouped GEMM per
+projection, which is what shards over the expert axis), scatter back with
+gates. The router is kept full-precision (accuracy-critical, tiny);
+expert weights are SmolLinear-quantized with per-expert precisions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smol
+from repro.core.qtypes import QuantConfig
+from .common import activation
+from .shard import shard
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, top_k: int,
+             qcfg: QuantConfig, *, num_shared: int = 0,
+             shared_d_ff: Optional[int] = None, act: str = "swiglu",
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    e = num_experts
+
+    def expert_bank(k, din, dout):
+        sub = jax.random.split(k, e)
+        leaves = [smol.linear_init(sk, din, dout, qcfg, dtype=dtype)
+                  for sk in sub]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    p = {
+        "router": smol.linear_init(ks[0], d_model, e, qcfg, quantized=False,
+                                   dtype=jnp.float32),
+        "up": expert_bank(ks[1], d_model, d_ff),
+        "down": expert_bank(ks[2], d_ff, d_model),
+    }
+    if act == "swiglu":
+        p["gate"] = expert_bank(ks[3], d_model, d_ff)
+    if num_shared:
+        from .mlp import mlp_init
+        p["shared"] = mlp_init(ks[4], d_model,
+                               (shared_d_ff or d_ff) * num_shared, qcfg,
+                               act=act, dtype=dtype)
+    return p
+
+
+def _expert_linear(bank: Dict, x_e, qcfg: QuantConfig, rng):
+    """bank: stacked-per-expert SmolLinear params [E, ...]; x_e [E, C, D].
+
+    When EP is off, the weight is explicitly resharded to
+    (None, None, expert_ff) at the point of use: the contraction dim K is
+    fsdp-sharded at rest, and without this constraint GSPMD resolves the
+    K(w)-vs-C(x) conflict by all-gathering the *activations* — 5x more
+    bytes than gathering the weights (mixtral train: 10.8 TB vs 0.7 TB per
+    step; §Perf B1). Under EP the constraint would erase the dp split of
+    the expert compute (measured 4.5x redundant FLOPs) — skip it."""
+    from .shard import spec, rules_active
+    bank = dict(bank)
+    ep_active = rules_active() and spec("experts")[0] is not None
+    if "w" in bank and bank["w"].ndim == 3 and not ep_active:
+        bank["w"] = shard(bank["w"], "experts", None, "expert_ff")
+    e = x_e.shape[0]
+    if rng is not None:
+        rngs = jax.random.split(rng, e)
+        return jax.vmap(lambda p, x, r: smol.linear_apply(p, x, qcfg, r)
+                        )(bank, x_e, rngs)
+    return jax.vmap(lambda p, x: smol.linear_apply(p, x, qcfg, None)
+                    )(bank, x_e)
+
+
+def moe_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
+              num_experts: int, top_k: int, act: str = "swiglu",
+              capacity_factor: float = 1.25,
+              router_norm_topk: bool = True):
+    """x [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e = num_experts
+    cap = max(1, math.ceil(t * top_k / e * capacity_factor))
+
+    # --- routing (fp32) ---
+    logits = smol.linear_apply(params["router"], xt.astype(jnp.float32),
+                               qcfg)                        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)     # [T, k]
+    if router_norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- sort-based dispatch with static capacity ---
+    flat_expert = expert_ids.reshape(-1)                    # [T*k]
+    order = jnp.argsort(flat_expert, stable=True)           # group by expert
+    sorted_expert = flat_expert[order]
+    # rank within expert = running index - start index of that expert's run
+    start = jnp.searchsorted(sorted_expert, jnp.arange(e))  # [E]
+    rank_sorted = jnp.arange(t * top_k) - start[sorted_expert]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)  # [T*k]
+    keep = rank < cap                                       # capacity drop
+    rank_c = jnp.minimum(rank, cap - 1)
+
+    # Scatter-add straight into the born-sharded [E, C, D] buffer: dropped
+    # tokens add zeros into the clamped last slot (no overflow row — its
+    # odd size would force the buffer replicated, and GSPMD then implements
+    # the scatter as a full-buffer all-reduce; §Perf A1/B1).
+    token_idx = jnp.repeat(jnp.arange(t), top_k)
+    gathered = shard(xt[token_idx], "tokens", "embed")
+    upd = jnp.where(keep[:, None], gathered, jnp.zeros_like(gathered))
+    x_e = shard(jnp.zeros((e, cap, d), x.dtype),
+                "experts", "expert_cap", "embed")
+    x_e = x_e.at[flat_expert, rank_c].add(upd)
+    x_e = shard(x_e, "experts", "expert_cap", "embed")
+
+    # --- expert FFN (grouped GEMMs over the expert axis) ---
+    rngs = [None] * 3 if rng is None else list(jax.random.split(rng, 3))
+    h = _expert_linear(params["up"], x_e, qcfg, rngs[0])    # [E, C, F]
+    h = shard(h, "experts", "expert_cap", "expert_ff")
+    if act == "swiglu":
+        g = _expert_linear(params["gate"], x_e, qcfg, rngs[1])
+        h = jax.nn.silu(g) * h
+    else:
+        h = activation(act)(h)
+    y_e = _expert_linear(params["down"], h, qcfg, rngs[2])  # [E, C, D]
+    y_e = shard(y_e, "experts", "expert_cap", "embed")
+
+    # --- combine ---
+    y_tok = shard(y_e[flat_expert, rank_c], "tokens", "embed")  # [T*k, D]
+    gates = jnp.where(keep, gate_vals.reshape(-1), 0.0).astype(y_tok.dtype)
+    y = jax.ops.segment_sum(y_tok * gates[:, None], token_idx, num_segments=t)
+    y = shard(y, "tokens", "embed")
+
+    # --- shared experts (DeepSeekMoE): dense, every token ---
+    if "shared" in params:
+        from .mlp import mlp_apply
+        y = y + mlp_apply(params["shared"], xt[None], qcfg,
+                          None if rng is None else rngs[0], act=act)[0]
+
+    # load-balancing auxiliary loss (GShard/Switch style)
+    me = jnp.mean(probs, axis=0)                             # [E]
+    ce = jnp.mean(
+        (jax.nn.one_hot(expert_ids, e).sum(1) > 0).astype(jnp.float32),
+        axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,68 @@
+"""Logical-axis sharding annotations.
+
+Model code tags tensors with *logical* axis names; the launcher installs a
+rules table mapping logical names to mesh axes. Outside a mesh context (CPU
+smoke tests) the annotations are no-ops, so the same model code runs
+everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[None, str, Tuple[str, ...]]
+
+_RULES: contextvars.ContextVar[Optional[Dict[str, AxisName]]] = \
+    contextvars.ContextVar("soniq_shard_rules", default=None)
+
+# Default production rules (see DESIGN.md §4). "fsdp" axes shard parameters;
+# "batch" shards data; "model" is the tensor-parallel axis.
+DEFAULT_RULES: Dict[str, AxisName] = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # activations: seq replicated by default
+    "seq_shard": "model",        # decode KV-cache seq (flash-decoding split)
+    "embed": None,               # activation d_model
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "tokens": ("pod", "data"),   # flattened [B*S] token dim in MoE dispatch
+    "expert_cap": None,          # capacity dim; dp-sharded when EP is off
+    "fsdp": ("pod", "data"),     # parameter sharding (ZeRO-3)
+    "ssm_heads": "model",
+    "state": None,
+    "conv": None,
+}
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[Dict[str, AxisName]]):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def rules_active() -> bool:
+    return _RULES.get() is not None
+
+
+def spec(*names: str) -> P:
+    rules = _RULES.get() or {}
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def shard(x, *names: str):
+    """Annotate activation/parameter x with logical axes (no-op without
+    rules)."""
+    if _RULES.get() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*names))

@@ -1,0 +1,243 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Scalar-identity A per head, ngroups=1. Training/prefill uses the chunked
+SSD decomposition (intra-chunk quadratic + inter-chunk recurrence via
+lax.scan); decode is the O(1) state update. The recurrent state stays fp32
+— the SONIQ analog of "the accumulator stays wide" (DESIGN.md §5) — while
+in/out projections are SmolLinear-quantized.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import smol
+from repro.core.qtypes import QuantConfig
+from .common import rms_norm
+from .shard import shard
+
+CONV_K = 4          # causal depthwise conv width
+HEAD_DIM = 64       # SSM head dim P
+
+
+def mamba2_init(key, d_model: int, d_state: int, qcfg: QuantConfig, *,
+                expand: int = 2, dtype=jnp.float32) -> Dict:
+    d_inner = expand * d_model
+    h = d_inner // HEAD_DIM
+    conv_dim = d_inner + 2 * d_state
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * d_state + h       # z, x, B, C, dt
+    dt = np.exp(np.random.default_rng(0).uniform(
+        np.log(1e-3), np.log(1e-1), h)).astype(np.float32)
+    return {
+        "in_proj": smol.linear_init(ks[0], d_model, proj_out, qcfg,
+                                    dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(np.log(np.expm1(dt)), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": smol.linear_init(ks[3], d_inner, d_model, qcfg,
+                                     dtype=dtype),
+    }
+
+
+def _segsum_exp(da):
+    """da [..., L] log-decays -> lower-triangular decay matrix
+    L[i, j] = exp(sum_{j < t <= i} da_t), 0 for j > i. [..., L, L]."""
+    l = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # [..., i, j]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(xdt, da, b_mat, c_mat, chunk: int):
+    """Chunked SSD scan.
+
+    xdt   [B, S, H, P]  (x pre-multiplied by dt)
+    da    [B, S, H]     (dt * A, negative log-decay per step)
+    b_mat [B, S, N], c_mat [B, S, N]   (ngroups=1, broadcast over H)
+    Returns y [B, S, H, P] (fp32) and final state [B, H, P, N].
+    """
+    bsz, s, h, p = xdt.shape
+    n = b_mat.shape[-1]
+    q = chunk if s % chunk == 0 else int(np.gcd(s, chunk))
+    nc = s // q
+    xdt = xdt.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    da = da.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bm = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cm = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da_h = jnp.moveaxis(da, -1, 2)                       # [B, nc, H, Q]
+    da_cs = jnp.cumsum(da_h, axis=-1)                    # [B, nc, H, Q]
+
+    # Intra-chunk (quadratic within chunk):
+    ell = _segsum_exp(da_h)                              # [B,nc,H,Q,Q]
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)           # [B,nc,Q,Q]
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp",
+                        cb, ell, xdt)
+
+    # Chunk states: contribution of each chunk to the carried state.
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)      # [B,nc,H,Q]
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bm, decay_states, xdt)
+
+    # Inter-chunk recurrence (sequential over nc — the only scan).
+    chunk_decay = jnp.exp(da_cs[..., -1])                # [B,nc,H]
+
+    def step(hprev, inp):
+        st, dec = inp
+        return dec[..., None, None] * hprev + st, hprev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # [B,nc,H,P,N]
+
+    # Inter-chunk output: decayed carried state read by C.
+    state_decay = jnp.exp(da_cs)                         # [B,nc,H,Q]
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cm, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def ssd_reference(xdt, da, b_mat, c_mat):
+    """Naive sequential recurrence (oracle for tests)."""
+    bsz, s, h, p = xdt.shape
+    n = b_mat.shape[-1]
+
+    def step(hprev, t):
+        xt, dat, bt, ct = t
+        hnew = jnp.exp(dat)[..., None, None] * hprev \
+            + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, ct)
+        return hnew, yt
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xdt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def _split_proj(zxbcdt, d_inner: int, d_state: int, h: int):
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner:2 * d_inner]
+    b_mat = zxbcdt[..., 2 * d_inner:2 * d_inner + d_state]
+    c_mat = zxbcdt[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    return z, xin, b_mat, c_mat, dt_raw
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv. seq [B,S,C]; w [K,C]; left-pad K-1."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + seq.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def mamba2_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
+                 d_state: int, expand: int = 2, chunk: int = 256):
+    """Full-sequence forward. x [B, S, D] -> [B, S, D]."""
+    bsz, s, d_model = x.shape
+    d_inner = expand * d_model
+    h = d_inner // HEAD_DIM
+    rngs = [None, None] if rng is None else list(jax.random.split(rng))
+    zxbcdt = smol.linear_apply(params["in_proj"], x, qcfg, rngs[0])
+    z, xin, b_mat, c_mat, dt_raw = _split_proj(zxbcdt, d_inner, d_state, h)
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xin = conv_out[..., :d_inner]
+    b_mat = conv_out[..., d_inner:d_inner + d_state]
+    c_mat = conv_out[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # [B,S,H]
+    a = -jnp.exp(params["A_log"])                        # [H]
+    xh = xin.reshape(bsz, s, h, HEAD_DIM)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, _ = ssd_chunked(xdt, dt * a, b_mat, c_mat, chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))           # gated
+    y = rms_norm({"g": params["norm_g"]}, y)
+    return smol.linear_apply(params["out_proj"], y.astype(x.dtype), qcfg,
+                             rngs[1])
+
+
+# ------------------------------------------------------------- decode ----
+def init_ssm_cache(batch: int, d_model: int, d_state: int, *,
+                   expand: int = 2, dtype=jnp.float32) -> Dict:
+    d_inner = expand * d_model
+    h = d_inner // HEAD_DIM
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "h": jnp.zeros((batch, h, HEAD_DIM, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+    }
+
+
+def ssm_cache_specs(batch: int, d_model: int, d_state: int, *,
+                    expand: int = 2, dtype=jnp.float32) -> Dict:
+    d_inner = expand * d_model
+    h = d_inner // HEAD_DIM
+    sd = jax.ShapeDtypeStruct
+    return {"h": sd((batch, h, HEAD_DIM, d_state), jnp.float32),
+            "conv": sd((batch, CONV_K - 1, d_inner + 2 * d_state), dtype)}
+
+
+def mamba2_decode(params: Dict, x, cache: Dict, qcfg: QuantConfig, *,
+                  d_state: int, expand: int = 2,
+                  layer_idx=None) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x [B, 1, D]. With layer_idx, cache leaves are the
+    stacked [L, ...] buffers (decode-scan carry; in-place update)."""
+    stacked = layer_idx is not None
+    full_cache = cache
+    if stacked:
+        cache = {k: jax.lax.dynamic_index_in_dim(v, layer_idx, 0, False)
+                 for k, v in cache.items()}
+    bsz, _, d_model = x.shape
+    d_inner = expand * d_model
+    h = d_inner // HEAD_DIM
+    zxbcdt = smol.linear_apply(params["in_proj"], x[:, 0], qcfg, None)
+    z, xin, b_mat, c_mat, dt_raw = _split_proj(zxbcdt, d_inner, d_state, h)
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)  # [B, C]
+    window = jnp.concatenate([cache["conv"],
+                              conv_in[:, None].astype(cache["conv"].dtype)],
+                             axis=1)                          # [B, K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xin = conv_out[..., :d_inner]
+    b_mat = conv_out[..., d_inner:d_inner + d_state]
+    c_mat = conv_out[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xin.reshape(bsz, h, HEAD_DIM)
+    hs = jnp.exp(dt * a)[..., None, None] * cache["h"] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, b_mat, dt)
+    y = jnp.einsum("bhpn,bn->bhp", hs, c_mat) \
+        + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm({"g": params["norm_g"]}, y)
+    out = smol.linear_apply(params["out_proj"], y.astype(x.dtype), qcfg,
+                            None)
+    new_cache = {"h": hs, "conv": window[:, 1:]}
+    if stacked:
+        new_cache = {k: full_cache[k].at[layer_idx].set(v)
+                     for k, v in new_cache.items()}
+    return out[:, None], new_cache

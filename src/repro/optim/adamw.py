@@ -1,0 +1,133 @@
+"""AdamW (in-repo; no optax dependency) with:
+
+  * integer-leaf awareness (pbits / perm buffers get no state, no update),
+  * decoupled weight decay with masking (no decay on norms/bias/s),
+  * a separate learning-rate group for the Phase-I ``s`` noise logits,
+  * global-norm gradient clipping,
+  * moments stored fp32 regardless of param dtype.
+
+State is a pytree aligned with params, so it shards identically (ZeRO-3 via
+the same FSDP partition specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    s_lr_mult: float = 10.0         # Phase-I s logits move faster (SMOL)
+    clip_norm: float = 1.0
+    # "float32" default; "bfloat16" halves optimizer-state HBM for the
+    # 100B+ configs (math still fp32 after upcast; production would use
+    # blockwise-int8 moments — bitsandbytes-style — same sharding).
+    moment_dtype: str = "float32"
+
+
+def _is_float(x) -> bool:
+    dt = getattr(x, "dtype", None)
+    if dt is None or dt == jax.dtypes.float0:
+        return False
+    return jnp.issubdtype(dt, jnp.floating)
+
+
+def _leaf_name(path) -> str:
+    return str(path[-1].key) if path and hasattr(path[-1], "key") else ""
+
+
+def init_state(params, moment_dtype="float32") -> Dict[str, Any]:
+    mdt = jnp.dtype(moment_dtype)
+
+    def zero(x):
+        return jnp.zeros(jnp.shape(x), mdt) if _is_float(x) else None
+    return {
+        "mu": jax.tree.map(zero, params),
+        "nu": jax.tree.map(zero, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(param_specs, moment_dtype="float32"):
+    """Optimizer-state ShapeDtypeStructs/shardings mirroring the params."""
+    mdt = jnp.dtype(moment_dtype)
+
+    def like(x):
+        if x is None:
+            return None
+        return jax.ShapeDtypeStruct(x.shape, mdt, sharding=getattr(
+            x, "sharding", None)) if jnp.issubdtype(x.dtype, jnp.floating) \
+            else None
+    return {
+        "mu": jax.tree.map(like, param_specs),
+        "nu": jax.tree.map(like, param_specs),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(grads) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads) if g is not None and _is_float(g)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale=1.0):
+    """One AdamW step. Integer leaves (pbits, perms) pass through; ``s``
+    leaves use lr * s_lr_mult and no weight decay."""
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat_p[0]]
+    treedef = flat_p[1]
+    p_leaves = [v for _, v in flat_p[0]]
+    none_aware = lambda x: x is None  # noqa: E731
+    g_leaves = jax.tree.leaves(grads, is_leaf=none_aware)
+    mu_leaves = jax.tree.leaves(state["mu"], is_leaf=none_aware)
+    nu_leaves = jax.tree.leaves(state["nu"], is_leaf=none_aware)
+    assert len(p_leaves) == len(g_leaves) == len(mu_leaves) == len(nu_leaves), \
+        (len(p_leaves), len(g_leaves), len(mu_leaves), len(nu_leaves))
+
+    new_p, new_mu, new_nu = [], [], []
+    for path, p, g, mu, nu in zip(paths, p_leaves, g_leaves, mu_leaves,
+                                  nu_leaves):
+        if mu is None or g is None or not _is_float(g):
+            new_p.append(p)
+            new_mu.append(mu)
+            new_nu.append(nu)
+            continue
+        name = _leaf_name(path)
+        gf = g.astype(jnp.float32) * scale
+        mdt = mu.dtype
+        mu = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * gf
+        nu = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        update = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        mu, nu = mu.astype(mdt), nu.astype(mdt)
+        lr = cfg.lr * lr_scale
+        if name == "s":
+            lr = lr * cfg.s_lr_mult
+        elif cfg.weight_decay and name in ("w", "table"):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+
+    unflatten = jax.tree_util.tree_unflatten
+    return (unflatten(treedef, new_p),
+            {"mu": unflatten(treedef, new_mu),
+             "nu": unflatten(treedef, new_nu),
+             "count": count},
+            {"grad_norm": gn})

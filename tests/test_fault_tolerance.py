@@ -1,0 +1,68 @@
+"""Crash-and-resume: SIGKILL a training subprocess mid-run, restart it, and
+verify it resumes from the checkpoint and finishes with a contiguous step
+history (the loop-level fault-tolerance contract)."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+SCRIPT = r"""
+import json, sys
+sys.path.insert(0, "src")
+import jax
+from repro.configs.base import ArchConfig
+from repro.core.qtypes import QuantConfig
+from repro.data import synthetic
+from repro.train import loop, state as state_lib
+
+ckpt, out, slow = sys.argv[1], sys.argv[2], sys.argv[3] == "slow"
+cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                 num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                 head_dim=16, dtype="float32", param_dtype="float32",
+                 q_block=32, quant=QuantConfig(mode="qat"))
+tcfg = state_lib.TrainConfig(t1=4, t2=14, warmup=1, checkpoint_every=2,
+                             ckpt_dir=ckpt)
+stream = synthetic.TokenStream(synthetic.TokenStreamConfig(
+    vocab_size=64, seq_len=16, batch_size=2))
+def slow_hook(step, state, metrics):
+    if slow:
+        import time; time.sleep(0.4)
+res = loop.train(cfg, tcfg, stream.batches(), hooks=[slow_hook])
+json.dump([h["step"] for h in res["history"]], open(out, "w"))
+"""
+
+
+def test_kill_and_resume(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    out = str(tmp_path / "steps.json")
+    script = str(tmp_path / "train.py")
+    with open(script, "w") as f:
+        f.write(SCRIPT)
+    env = dict(os.environ, PYTHONPATH="src")
+
+    # run slow, kill mid-training
+    p = subprocess.Popen([sys.executable, script, ckpt, out, "slow"],
+                         env=env, cwd=os.getcwd())
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        if os.path.exists(os.path.join(ckpt, "LATEST")):
+            with open(os.path.join(ckpt, "LATEST")) as f:
+                if int(f.read().strip() or 0) >= 4:
+                    break
+        time.sleep(0.3)
+    p.send_signal(signal.SIGKILL)
+    p.wait()
+    assert not os.path.exists(out), "should have died before finishing"
+    with open(os.path.join(ckpt, "LATEST")) as f:
+        resumed_from = int(f.read().strip())
+    assert resumed_from >= 2
+
+    # restart: must resume from checkpoint and complete
+    subprocess.run([sys.executable, script, ckpt, out, "fast"], env=env,
+                   cwd=os.getcwd(), check=True, timeout=600)
+    steps = json.load(open(out))
+    assert steps[0] == resumed_from          # resumed, not restarted
+    assert steps[-1] == 13                   # ran to completion
+    assert steps == list(range(resumed_from, 14))

@@ -1,0 +1,149 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack as pack_lib
+from repro.core import quant, smol
+from repro.core.qtypes import QuantConfig
+from repro.kernels import ops, prng, ref
+
+
+def _rand_packed(key, kp, n, p):
+    u = jax.random.randint(key, (kp, n), 0, 2 ** p).astype(jnp.uint8)
+    return pack_lib.pack_codes(u, p)
+
+
+# ----------------------------------------------------- packed matmul ----
+@pytest.mark.parametrize("p", [1, 2, 4])
+@pytest.mark.parametrize("m,kp,n", [(8, 128, 128), (32, 256, 128),
+                                    (16, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_segment_matmul_sweep(p, m, kp, n, dtype):
+    key = jax.random.PRNGKey(p * 1000 + m + kp + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (m, kp), dtype)
+    wp = _rand_packed(k2, kp, n, p)
+    scales = jax.random.uniform(k3, (kp // 16,), jnp.float32, 0.5, 2.0)
+    got = ops.packed_segment_matmul(x, wp, scales, p=p, interpret=True,
+                                    block_m=32, block_n=128, block_k=128)
+    want = ref.packed_segment_matmul_ref(x, wp, scales, p)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_packed_segment_matmul_no_scales(p):
+    key = jax.random.PRNGKey(p)
+    x = jax.random.normal(key, (16, 128))
+    wp = _rand_packed(key, 128, 128, p)
+    got = ops.packed_segment_matmul(x, wp, None, p=p, interpret=True,
+                                    block_m=16, block_n=128, block_k=128)
+    want = ref.packed_segment_matmul_ref(x, wp, None, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_packed_segment_matmul_act_quant(p):
+    key = jax.random.PRNGKey(7 + p)
+    x = jax.random.normal(key, (8, 256)) * 0.7
+    wp = _rand_packed(key, 256, 128, p)
+    s = quant.abs_max_scale(x)
+    got = ops.packed_segment_matmul(x, wp, None, p=p, act_quant=True,
+                                    act_scale=s, interpret=True,
+                                    block_m=8, block_n=128, block_k=128)
+    want = ref.packed_segment_matmul_ref(x / s, wp, None, p,
+                                         act_quant=True) * s
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_packed_matmul_mixed_vs_serve_linear():
+    """The fused kernel path must match the jnp serve path of SmolLinear."""
+    qcfg = QuantConfig(mode="qat", mix=(0.5, 0.25, 0.25))
+    key = jax.random.PRNGKey(0)
+    params = smol.linear_init(key, 256, 128, qcfg)
+    params["pbits"] = jnp.asarray(
+        np.array([4, 1, 2, 4, 2, 1, 4, 4, 1, 2, 4, 2, 1, 4, 4, 2], np.int8))
+    sp = smol.serve_params_from_qat(params, qcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256))
+    qserve = QuantConfig(mode="serve", mix=qcfg.mix)
+    y_jnp = smol.linear_apply(sp, x, qserve)
+    y_kern = ops.packed_matmul(x, sp, act_quant=True, interpret=True,
+                               block_m=4, block_n=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------- quantize pack ----
+@pytest.mark.parametrize("p", [1, 2, 4])
+@pytest.mark.parametrize("k,n", [(128, 128), (256, 256), (64, 128)])
+def test_quantize_pack_sweep(p, k, n):
+    key = jax.random.PRNGKey(p * 31 + k + n)
+    w = jax.random.normal(key, (k, n)) * 0.8
+    scales = jax.random.uniform(jax.random.PRNGKey(1), (k // 16,),
+                                jnp.float32, 0.5, 1.5)
+    got = ops.quantize_pack(w, scales, p=p, interpret=True,
+                            block_k=64, block_n=128)
+    want = ref.quantize_pack_ref(w, p, scales)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_pack_roundtrips_through_matmul():
+    """pack(w) then packed matmul == fake_quant(w) matmul."""
+    p, k, n = 4, 128, 128
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (k, n)) * 0.4
+    scales = quant.per_group_weight_scale(w, 16)
+    wp = ops.quantize_pack(w, scales, p=p, interpret=True)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, k))
+    y = ops.packed_segment_matmul(x, wp, scales, p=p, interpret=True,
+                                  block_m=8, block_n=128, block_k=128)
+    wq = np.asarray(quant.fake_quant(jnp.asarray(np.asarray(w).T),
+                                     jnp.full((k // 16,), 4.0), scales, 16)).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ wq,
+                               rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- noise inject ----
+@pytest.mark.parametrize("k,n", [(64, 128), (256, 256), (128, 512)])
+def test_noise_inject_matches_ref(k, n):
+    key = jax.random.PRNGKey(k + n)
+    w = jax.random.normal(key, (k, n)) * 0.5
+    s = jax.random.normal(jax.random.PRNGKey(1), (k // 16,))
+    got = ops.noise_inject(w, s, 1234, interpret=True,
+                           block_k=64, block_n=128)
+    want = ref.noise_inject_ref(w, s, 1234)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_noise_inject_respects_bounds_and_scale():
+    k, n = 128, 256
+    w = jnp.zeros((k, n))
+    from repro.core import noise as noise_lib
+    s = jnp.asarray([noise_lib.s_init(4)] * 4 + [noise_lib.s_init(2)] * 4)
+    out = np.asarray(ops.noise_inject(w, s, 7, interpret=True))
+    assert np.max(np.abs(out[:64])) <= 2 ** -3 + 1e-6     # sigma = 1/8
+    assert np.max(np.abs(out[64:])) <= 2 ** -1 + 1e-6     # sigma = 1/2
+    assert np.max(np.abs(out[64:])) > 2 ** -3             # actually scaled up
+
+
+def test_noise_inject_deterministic_and_seed_sensitive():
+    w = jnp.zeros((64, 128))
+    s = jnp.zeros((4,))
+    a = np.asarray(ops.noise_inject(w, s, 1, interpret=True))
+    b = np.asarray(ops.noise_inject(w, s, 1, interpret=True))
+    c = np.asarray(ops.noise_inject(w, s, 2, interpret=True))
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a - c).max() > 0
+
+
+def test_prng_uniformity():
+    idx = jnp.arange(1 << 16, dtype=jnp.uint32)
+    u = np.asarray(prng.uniform_pm1(idx, 42))
+    assert abs(u.mean()) < 0.02
+    assert abs(u.std() - 1 / np.sqrt(3)) < 0.02    # std of U[-1,1]
+    assert u.min() >= -1.0 and u.max() < 1.0

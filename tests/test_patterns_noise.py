@@ -1,0 +1,230 @@
+"""Tests for the 45-pattern table, Problem-1 solver, PatternMatch, Phase-I
+noise machinery, and the two-phase schedule boundary transform."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise, patterns, quant, schedule, smol
+from repro.core.qtypes import QuantConfig
+
+
+# ------------------------------------------------------------- patterns ----
+def test_table2_structure():
+    assert len(patterns.PATTERNS) == 45
+    for (n1, n2, n4) in patterns.PATTERNS:
+        assert n1 * 1 + n2 * 2 + n4 * 4 == 128          # fills the vector
+        assert n1 % 16 == 0 and n2 % 8 == 0 and n4 % 4 == 0  # lane granularity
+    # Spot-check the paper's Table II rows.
+    assert patterns.PATTERNS[2] == (0, 16, 24)    # index 3
+    assert patterns.PATTERNS[16] == (16, 56, 0)   # index 17
+    assert patterns.PATTERNS[34] == (64, 32, 0)   # index 35
+
+
+def test_design_point_subsets():
+    p4 = patterns.patterns_for(4)
+    assert p4 == [(0, 0, 32), (128, 0, 0), (0, 64, 0), (16, 56, 0)]
+    assert len(patterns.patterns_for(8)) == 8
+    assert len(patterns.patterns_for(45)) == 45
+
+
+def test_problem1_uniform_cases():
+    # All 4-bit: 320 elements -> 10 vectors of (0,0,32).
+    sol = patterns.solve_problem1(320, 0, 0)
+    assert sol.num_vectors == 10
+    assert sol.counts == {(0, 0, 32): 10}
+    # All 1-bit: 256 elements -> 2 vectors of (128,0,0).
+    sol = patterns.solve_problem1(0, 0, 256)
+    assert sol.num_vectors == 2
+
+
+def test_problem1_promotion():
+    # 16 four-bit + 112 one-bit elements = 176 bits -> needs 2 vectors
+    # (16 4-bit elems leave only 64 bits, < 112 1-bit elems), and promotion
+    # lets the solver satisfy the 1-bit demand with any leftover capacity.
+    sol = patterns.solve_problem1(16, 0, 112, patterns.PATTERNS)
+    assert sol.num_vectors == 2
+    c4, c2, c1 = sol.element_budget()
+    assert c4 >= 16 and c4 + c2 + c1 >= 128
+    # 8 four-bit + 96 one-bit = 128 bits exactly -> pattern (96, 0, 8) fits in 1.
+    sol1 = patterns.solve_problem1(8, 0, 96, patterns.PATTERNS)
+    assert sol1.num_vectors == 1
+
+
+def test_problem1_restricted_subset_needs_more_vectors():
+    allowed = patterns.patterns_for(4)
+    full = patterns.solve_problem1(100, 100, 100, patterns.PATTERNS)
+    restr = patterns.solve_problem1(100, 100, 100, allowed)
+    assert restr.num_vectors >= full.num_vectors
+
+
+@given(st.integers(0, 500), st.integers(0, 500), st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_property_problem1_covers(n4, n2, n1):
+    sol = patterns.solve_problem1(n4, n2, n1)
+    c4, c2, c1 = sol.element_budget()
+    assert c4 >= n4
+    assert c4 + c2 >= n4 + n2
+    assert c4 + c2 + c1 >= n4 + n2 + n1
+    # Lower bound: can never beat total-bits / 128.
+    assert sol.num_vectors >= -(-(4 * n4 + 2 * n2 + n1) // 128)
+
+
+def test_pattern_match_ranks_importance():
+    # 24 groups; lowest s (most important) must land on 4 bits.
+    s = np.linspace(-3, 3, 24)
+    sol = patterns.solve_problem1(8 * 16, 8 * 16, 8 * 16)
+    s_m = patterns.pattern_match(s, sol, 16)
+    pb = patterns.precisions_from_matched_s(s_m)
+    c4, c2, c1 = sol.element_budget()
+    assert (pb == 4).sum() == c4 // 16
+    order = np.argsort(s)
+    assert set(pb[order[: c4 // 16]]) == {4}      # most important -> 4 bits
+    assert pb[order[-1]] == 1                     # least important -> 1 bit
+
+
+def test_reorder_channels():
+    pbits = np.array([1, 4, 2, 4, 1, 2], np.int8)
+    perm = patterns.reorder_channels(pbits)
+    np.testing.assert_array_equal(pbits[perm], [4, 4, 2, 2, 1, 1])
+    chan = patterns.expand_group_perm(perm, 4)
+    assert chan.shape == (24,)
+    assert sorted(chan.tolist()) == list(range(24))
+
+
+def test_select_hardware_subset():
+    hists = [(512, 256, 128), (128, 512, 256), (1024, 0, 0)]
+    sub = patterns.select_hardware_subset(hists, 4)
+    assert len(sub) == 4
+    assert (0, 0, 32) in sub     # uniform-4 anchor always present
+
+
+# ---------------------------------------------------------------- noise ----
+def test_sigma_init_matches_roundoff():
+    # sigma(s_init(p)) == 2^(1-p) — the paper's core identity.
+    for p in (2, 4):   # (p=1 is the asymptotic case)
+        assert float(noise.sigma(noise.s_init(p))) == pytest.approx(
+            2.0 ** (1 - p), rel=1e-5)
+    assert float(noise.sigma(noise.s_init(1))) > 0.999
+
+
+def test_bits_soft_and_penalty():
+    s = jnp.asarray([noise.s_init(4), noise.s_init(2)])
+    np.testing.assert_allclose(np.asarray(noise.bits_soft(s)), [4.0, 2.0],
+                               rtol=1e-5)
+    assert float(noise.bit_penalty(s)) == pytest.approx(3.0 + 1.0, rel=1e-5)
+
+
+def test_precision_readout_bands():
+    s = jnp.asarray([noise.T_4B - 0.1, noise.T_4B + 0.1,
+                     noise.T_2B - 0.1, noise.T_2B + 0.1])
+    p = noise.snap_124(noise.precision_from_s(s))
+    np.testing.assert_array_equal(np.asarray(p), [4, 2, 2, 1])
+
+
+def test_weight_noise_bounds():
+    key = jax.random.PRNGKey(0)
+    w = jnp.zeros((32, 8))
+    s = jnp.asarray([noise.s_init(4), noise.s_init(2)])
+    wn = noise.inject_weight_noise(w, s, key, 16)
+    wn = np.asarray(wn)
+    assert np.max(np.abs(wn[:16])) <= 2 ** (1 - 4) + 1e-6
+    assert np.max(np.abs(wn[16:])) <= 2 ** (1 - 2) + 1e-6
+    # Clip: large weights end up inside +-(2 - sigma).
+    w2 = jnp.full((32, 8), 5.0)
+    wn2 = np.asarray(noise.inject_weight_noise(w2, s, key, 16))
+    assert np.max(wn2[:16]) <= 2 - 2 ** (1 - 4) + 1e-6
+
+
+def test_noise_grad_flows_to_s():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (16, 4))
+
+    def loss(s):
+        wn = noise.inject_weight_noise(w, s, key, 16)
+        return jnp.sum(wn ** 2) + 1e-2 * noise.bit_penalty(s)
+
+    g = jax.grad(loss)(jnp.asarray([0.0]))
+    assert np.isfinite(np.asarray(g)).all() and float(jnp.abs(g[0])) > 0
+
+
+# ----------------------------------------------------------- smol linear ----
+@pytest.mark.parametrize("mode", ["fp", "noise", "qat"])
+def test_linear_modes_shapes(mode):
+    qcfg = QuantConfig(mode=mode)
+    key = jax.random.PRNGKey(0)
+    p = smol.linear_init(key, 64, 32, qcfg, use_bias=True)
+    x = jax.random.normal(key, (3, 64))
+    y = smol.linear_apply(p, x, qcfg, rng=key)
+    assert y.shape == (3, 32)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_qat_close_to_fp_at_4bit():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128)) * 0.5
+
+    # Weight-only 4-bit: tight.
+    qw = QuantConfig(mode="qat", mix=(1.0, 0.0, 0.0),
+                     quantize_activations=False)
+    p = smol.linear_init(key, 128, 64, qw)
+    y_fp = x @ p["w"]
+    rel_w = float(jnp.linalg.norm(smol.linear_apply(p, x, qw) - y_fp)
+                  / jnp.linalg.norm(y_fp))
+    # absmax-scaled 4-bit on N(0,s) weights: error std ~= 0.127*s_w -> ~13%.
+    assert rel_w < 0.16
+
+    # W4A4 (paper's input-weight consistency): looser but bounded.
+    qwa = QuantConfig(mode="qat", mix=(1.0, 0.0, 0.0))
+    rel_wa = float(jnp.linalg.norm(smol.linear_apply(p, x, qwa) - y_fp)
+                   / jnp.linalg.norm(y_fp))
+    assert rel_wa < 0.35
+    assert rel_w < rel_wa
+
+
+def test_serve_matches_qat():
+    """The packed serve path must reproduce the QAT fake-quant numerics
+    (weight side exactly; activation side shares the same quantizer)."""
+    qcfg = QuantConfig(mode="qat", mix=(0.5, 0.25, 0.25))
+    key = jax.random.PRNGKey(0)
+    p = smol.linear_init(key, 128, 32, qcfg)
+    # scramble pbits so reordering is non-trivial
+    pb = np.array([4, 1, 2, 4, 2, 1, 4, 4], np.int8)
+    p["pbits"] = jnp.asarray(pb)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 128))
+    y_qat = smol.linear_apply(p, x, qcfg)
+
+    sp = smol.serve_params_from_qat(p, qcfg)
+    qserve = QuantConfig(mode="serve", mix=qcfg.mix)
+    y_srv = smol.linear_apply(sp, x, qserve)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_srv),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_schedule_boundary_transform():
+    qcfg = QuantConfig(mode="noise", num_patterns=4)
+    key = jax.random.PRNGKey(0)
+    params = {"layer0": smol.linear_init(key, 128, 16, qcfg),
+              "layer1": smol.linear_init(key, 64, 16, qcfg)}
+    # Pretend training moved s around.
+    params["layer0"]["s"] = jnp.asarray(np.linspace(-3, 6, 8), jnp.float32)
+    new, report = schedule.pattern_match_params(params, qcfg)
+    assert "s" not in new["layer0"] and "pbits" in new["layer0"]
+    assert new["layer0"]["pbits"].shape == (8,)
+    assert set(np.asarray(new["layer0"]["pbits"]).tolist()) <= {1, 2, 4}
+    assert 1.0 <= schedule.average_bpp(report) <= 4.0
+    # QAT forward works on the transformed tree.
+    qat = QuantConfig(mode="qat", num_patterns=4)
+    x = jax.random.normal(key, (2, 128))
+    y = smol.linear_apply(new["layer0"], x, qat)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_bit_penalty_of_params_tree():
+    qcfg = QuantConfig(mode="noise")
+    key = jax.random.PRNGKey(0)
+    params = {"a": smol.linear_init(key, 32, 8, qcfg),
+              "nested": {"b": smol.linear_init(key, 32, 8, qcfg)}}
+    pen = float(smol.bit_penalty_of_params(params))
+    assert pen == pytest.approx(2 * 2 * 3.0, rel=1e-4)  # 2 layers * 2 groups * (4-1)

@@ -1,0 +1,145 @@
+"""Unit + property tests for the SMOL grid, fake-quant STE, and packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack, quant
+from repro.core.qtypes import QuantConfig
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------- grid ----
+def test_paper_examples():
+    # Paper §II-B: 1101 -> 1.375, 10 -> 0.5, 1-bit {0,1} -> {-1,+1}.
+    assert quant.smol_values(4)[0b1101] == pytest.approx(1.375)
+    assert quant.smol_values(2)[0b10] == pytest.approx(0.5)
+    np.testing.assert_allclose(quant.smol_values(1), [-1.0, 1.0])
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_grid_structure(p):
+    v = quant.smol_values(p)
+    assert len(v) == 2 ** p
+    np.testing.assert_allclose(v, -v[::-1])          # symmetric
+    assert 0.0 not in v                               # zero-free
+    if p > 1:
+        np.testing.assert_allclose(np.diff(v), 2.0 ** (2 - p))  # step
+    assert v[-1] == pytest.approx(2 - 2 ** (1 - p))   # range
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_quantize_roundtrip_exact(p):
+    v = jnp.asarray(quant.smol_values(p))
+    u = quant.quantize_to_int(v, p)
+    np.testing.assert_allclose(quant.dequantize_int(u, p), v, atol=1e-6)
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_snap_is_nearest(p):
+    xs = np.linspace(-2.5, 2.5, 1001).astype(np.float32)
+    got = np.asarray(quant.snap_to_grid(jnp.asarray(xs), p))
+    grid = quant.smol_values(p)
+    want = grid[np.argmin(np.abs(xs[:, None] - grid[None, :]), axis=1)]
+    # Ties can fall either way; error must never exceed half-step.
+    np.testing.assert_array_less(np.abs(got - np.clip(xs, grid[0], grid[-1])),
+                                 2.0 ** (1 - p) + 1e-6)
+    mism = np.abs(got - want) > 1e-6
+    assert mism.mean() < 0.01   # only tie points may differ
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.sampled_from([1, 2, 4]))
+@settings(max_examples=30, deadline=None)
+def test_property_max_roundoff_equals_sigma_init(seed, p):
+    """|x - snap(x)| <= 2^(1-p) inside the grid range — the identity that
+    makes sigma(s_init) the right noise scale."""
+    rng = np.random.default_rng(seed)
+    lim = 2 - 2.0 ** (1 - p)
+    x = rng.uniform(-lim, lim, size=64).astype(np.float32)
+    q = np.asarray(quant.snap_to_grid(jnp.asarray(x), p))
+    assert np.max(np.abs(x - q)) <= 2.0 ** (1 - p) + 1e-6
+
+
+# ----------------------------------------------------------- fake quant ----
+def test_fake_quant_mixed_precision_groups():
+    k, g = 48, 16
+    pbits = jnp.asarray([4, 2, 1], jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1.9, 1.9, (5, k)),
+                    jnp.float32)
+    y = quant.fake_quant(x, pbits, 1.0, g)
+    y = np.asarray(y)
+    for gi, p in enumerate([4, 2, 1]):
+        seg = y[:, gi * g:(gi + 1) * g]
+        grid = quant.smol_values(p)
+        d = np.min(np.abs(seg[..., None] - grid), axis=-1)
+        np.testing.assert_allclose(d, 0, atol=1e-5)
+
+
+def test_fake_quant_ste_gradient():
+    pbits = jnp.asarray([4.0])
+    f = lambda x: jnp.sum(quant.fake_quant(x, pbits, 1.0, 4))
+    x = jnp.asarray([[0.3, -0.2, 1.0, 5.0]])    # last is out of range
+    gx = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(gx), [[1, 1, 1, 0]])  # clipped STE
+
+
+def test_fake_quant_with_scale():
+    pbits = jnp.asarray([4.0])
+    x = jnp.asarray([[10.0, -3.0, 0.5, 7.0]])
+    s = quant.abs_max_scale(x)
+    y = quant.fake_quant(x, pbits, s, 4)
+    sv = float(np.asarray(s).reshape(()))
+    assert np.max(np.abs(np.asarray(y - x))) <= sv * 2 ** (1 - 4) + 1e-5
+
+
+# ---------------------------------------------------------------- pack ----
+@pytest.mark.parametrize("p,k", [(1, 64), (2, 64), (4, 64), (4, 16), (2, 8),
+                                 (1, 8)])
+def test_pack_roundtrip(p, k):
+    rng = np.random.default_rng(p * 100 + k)
+    u = rng.integers(0, 2 ** p, size=(k, 7)).astype(np.uint8)
+    b = pack.pack_codes(jnp.asarray(u), p)
+    assert b.shape == (k * p // 8, 7)
+    u2 = pack.unpack_codes(b, p, k)
+    np.testing.assert_array_equal(np.asarray(u2), u)
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([(4, 2, 2), (8, 0, 0), (0, 8, 0), (0, 0, 8),
+                        (2, 3, 3), (5, 2, 1)]))
+@settings(max_examples=20, deadline=None)
+def test_property_pack_weight_roundtrip(seed, mix_groups):
+    """quantize->pack->unpack->dequant == fake_quant for any segment mix."""
+    g4, g2, g1 = mix_groups
+    gsz = 16
+    k = (g4 + g2 + g1) * gsz
+    pbits = np.array([4] * g4 + [2] * g2 + [1] * g1, np.int8)
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1.99, 1.99, size=(k, 5)).astype(np.float32)
+    packed = pack.quantize_pack_weight(jnp.asarray(w), pbits, None, gsz)
+    w_rt = np.asarray(pack.unpack_dequantize_weight(packed))
+    want = np.asarray(quant.fake_quant(
+        jnp.asarray(w.T), jnp.asarray(pbits, jnp.float32), 1.0, gsz)).T
+    np.testing.assert_allclose(w_rt, want, atol=1e-5)
+
+
+def test_packed_size_matches_bpp():
+    qc = QuantConfig(mode="serve", mix=(0.5, 0.25, 0.25), scale_mode="none")
+    k, n = 128, 32
+    pbits = np.array([4] * 4 + [2] * 2 + [1] * 2, np.int8)
+    w = np.random.default_rng(0).uniform(-1, 1, (k, n)).astype(np.float32)
+    packed = pack.quantize_pack_weight(jnp.asarray(w), pbits, None, 16)
+    bpp = pack.bits_per_param(packed)
+    # (64*4 + 32*2 + 32*1)/128 = 2.75 bits + metadata
+    assert abs(bpp - 2.75) < 0.05
+
+
+def test_fixed_point_16_6():
+    x = jnp.asarray([0.015625, 0.02, 1000.0, -1000.0])
+    y = np.asarray(quant.to_fixed_16_6(x))
+    assert y[0] == pytest.approx(1 / 64)
+    assert y[1] == pytest.approx(1 / 64)          # rounds to nearest 1/64
+    assert y[2] == pytest.approx((2 ** 15 - 1) / 64)   # saturates
+    assert y[3] == pytest.approx(-(2 ** 15) / 64)

@@ -1,0 +1,173 @@
+"""Optimizer, schedules, gradient compression, data, checkpointing, FT."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.optim import adamw, grad_compress, schedules
+from repro.train import checkpoint as ckpt
+from repro.train import ft
+
+
+# ----------------------------------------------------------------- adamw ----
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"layer": {"w": jnp.asarray([[5.0, -3.0]]),
+                        "pbits": jnp.asarray([4], jnp.int8)}}
+    state = adamw.init_state(params)
+
+    def loss(p):
+        return jnp.sum(p["layer"]["w"] ** 2)
+
+    for _ in range(120):
+        g = jax.grad(loss, allow_int=True)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+    # integer leaf untouched
+    assert params["layer"]["pbits"].dtype == jnp.int8
+
+
+def test_adamw_s_lr_multiplier():
+    cfg = adamw.AdamWConfig(lr=0.01, s_lr_mult=10.0, weight_decay=0.0,
+                            clip_norm=1e9)
+    params = {"w": jnp.asarray([1.0]), "s": jnp.asarray([1.0])}
+    state = adamw.init_state(params)
+    g = {"w": jnp.asarray([1.0]), "s": jnp.asarray([1.0])}
+    new, _, _ = adamw.apply_updates(params, g, state, cfg)
+    dw = float((params["w"] - new["w"])[0])
+    ds = float((params["s"] - new["s"])[0])
+    assert ds == pytest.approx(10 * dw, rel=1e-3)
+
+
+def test_grad_clipping():
+    cfg = adamw.AdamWConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = adamw.init_state(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw.apply_updates(params, g, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedules():
+    lr = schedules.warmup_cosine(jnp.asarray(0), warmup=10, total=100)
+    assert float(lr) == 0.0
+    lr_mid = float(schedules.warmup_cosine(jnp.asarray(10), warmup=10,
+                                           total=100))
+    assert lr_mid == pytest.approx(1.0, rel=1e-3)
+    p1 = float(schedules.two_phase(jnp.asarray(50), t1=60, warmup=0,
+                                   total=100))
+    p2 = float(schedules.two_phase(jnp.asarray(70), t1=60, warmup=0,
+                                   total=100))
+    assert p2 < p1
+
+
+# ------------------------------------------------------- grad compression ----
+def test_compress_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, (256,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    # Repeated compression of the same gradient: error feedback should make
+    # the RUNNING SUM of decompressed gradients track the true sum.
+    total = jnp.zeros_like(g)
+    for i in range(20):
+        q, scale, err = grad_compress.compress_leaf(g, err)
+        total = total + grad_compress.decompress_leaf(q, scale)
+    drift = float(jnp.max(jnp.abs(total / 20 - g)))
+    assert drift < float(jnp.max(jnp.abs(g))) / 127 + 1e-5
+
+
+def test_compress_tree_roundtrip():
+    params = {"a": jnp.ones((8,)), "n": {"b": jnp.full((4,), -2.0)},
+              "i": jnp.asarray([1], jnp.int8)}
+    err = grad_compress.init_error_tree(params)
+    q, err2 = grad_compress.compress_tree(params, err)
+    out = grad_compress.decompress_tree(q)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0, rtol=0.02)
+    np.testing.assert_allclose(np.asarray(out["n"]["b"]), -2.0, rtol=0.02)
+
+
+# ------------------------------------------------------------------ data ----
+def test_token_stream_deterministic_and_sharded():
+    cfg = synthetic.TokenStreamConfig(vocab_size=128, seq_len=16,
+                                      batch_size=4, seed=3)
+    a = next(synthetic.TokenStream(cfg, host_id=0).batches())
+    b = next(synthetic.TokenStream(cfg, host_id=0).batches())
+    c = next(synthetic.TokenStream(cfg, host_id=1).batches())
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert np.any(a["tokens"] != c["tokens"])     # hosts draw disjoint data
+    assert a["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_classification_learnable_structure():
+    (xtr, ytr), (xte, yte) = synthetic.classification_dataset(
+        num_classes=4, dim=(4, 4, 3), n_train=256, n_test=64)
+    assert xtr.shape == (256, 4, 4, 3)
+    # nearest-prototype on train means must beat chance on test
+    protos = np.stack([xtr[ytr == c].mean(0).ravel() for c in range(4)])
+    pred = np.argmin(((xte.reshape(64, -1)[:, None] - protos[None]) ** 2)
+                     .sum(-1), axis=1)
+    assert (pred == yte).mean() > 0.4
+
+
+# ------------------------------------------------------------ checkpoint ----
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"mu": {"w": jnp.ones((2, 3))}, "nu": {"w": None},
+                     "count": jnp.asarray(5, jnp.int32)},
+             "step": jnp.asarray(5, jnp.int32)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(state, d, s, keep=2)
+    assert ckpt.latest_step(d) == 4
+    restored, step = ckpt.restore(d, state)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert restored["opt"]["nu"]["w"] is None
+    # GC keeps only 2
+    kept = [p for p in os.listdir(d) if p.startswith("step_")]
+    assert len(kept) == 2
+
+
+def test_checkpoint_async(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = {"w": jnp.ones((4,))}
+    t = ckpt.async_save(state, d, 7)
+    t.join()
+    restored, step = ckpt.restore(d, state)
+    assert step == 7
+
+
+# -------------------------------------------------------------------- ft ----
+def test_heartbeat_failure_detection():
+    hb = ft.HeartbeatMonitor([0, 1, 2], timeout=10.0)
+    now = 1000.0
+    for h in (0, 1, 2):
+        hb.beat(h, now)
+    hb.beat(0, now + 20)
+    hb.beat(1, now + 20)
+    assert hb.failed_hosts(now + 21) == [2]
+    assert hb.surviving(now + 21) == [0, 1]
+
+
+def test_straggler_detection():
+    sm = ft.StragglerMonitor([0, 1, 2, 3], ratio=1.5, patience=3)
+    for step in range(6):
+        for h in (0, 1, 2):
+            sm.record(h, 1.0)
+        sm.record(3, 3.0)
+        out = sm.stragglers()
+    assert out == [3]
+
+
+def test_plan_remesh_preserves_tp():
+    data, model = ft.plan_remesh(survivors=60, model=16, chips_per_host=4)
+    assert model == 16
+    assert data * model <= 60 * 4
+    assert data & (data - 1) == 0        # power of two
+    mb = ft.rescale_microbatches(256, old_data=16, new_data=8, old_mb=1)
+    assert mb == 2                       # global batch preserved

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schedule as schedule_lib
+from repro import soniq
 from repro.core.qtypes import QuantConfig
 from repro.data import synthetic
 from repro.models import cnn
@@ -53,8 +53,6 @@ def data(seed=0):
 def freeze_original(params, max_bits: int = 8):
     """'Original SMOL' freeze: per-group precisions = clip(round(raw), 1, 8)
     — no {1,2,4} snap, no pattern matching (paper Alg. 1 line 9)."""
-    from repro.core import smol as smol_lib
-
     def fix(node):
         if not (isinstance(node, dict) and "s" in node and "w" in node):
             return node
@@ -65,7 +63,7 @@ def freeze_original(params, max_bits: int = 8):
         new["pbits"] = jnp.asarray(pb)
         return new
 
-    return smol_lib._tree_map_dicts(fix, params)
+    return soniq.tree_map_layers(fix, params)
 
 
 def train_cnn(qcfg: QuantConfig, *, t1: int, t2: int, lr: float = 3e-3,
@@ -80,9 +78,9 @@ def train_cnn(qcfg: QuantConfig, *, t1: int, t2: int, lr: float = 3e-3,
     n = xtr.shape[0]
     key = jax.random.PRNGKey(seed)
 
-    phase1 = dataclasses.replace(qcfg, mode="noise") if t1 > 0 else None
-    phase2 = dataclasses.replace(qcfg, mode="qat") if qcfg.mode != "fp" \
-        else qcfg
+    phase1 = qcfg.with_mode(soniq.Phase.NOISE) if t1 > 0 else None
+    phase2 = qcfg.with_mode(soniq.Phase.QAT) \
+        if qcfg.phase is not soniq.Phase.FP else qcfg
 
     cfg1 = cnn.CNNConfig(quant=phase1 or phase2, channels=CNN_CHANNELS,
                          blocks_per_stage=CNN_BLOCKS)
@@ -107,7 +105,7 @@ def train_cnn(qcfg: QuantConfig, *, t1: int, t2: int, lr: float = 3e-3,
     # needs roughly-converged weights to read out channel importance).
     if phase1 is not None:
         warm_cfg = cnn.CNNConfig(
-            quant=dataclasses.replace(phase1, mode="fp"),
+            quant=phase1.with_mode(soniq.Phase.FP),
             channels=CNN_CHANNELS, blocks_per_stage=CNN_BLOCKS)
         warm_step = make_step(warm_cfg)
         rngs_w = np.random.default_rng(seed + 7)
@@ -128,8 +126,7 @@ def train_cnn(qcfg: QuantConfig, *, t1: int, t2: int, lr: float = 3e-3,
             if original_freeze:
                 params = freeze_original(params)
             else:
-                params, report = schedule_lib.pattern_match_params(
-                    params, qcfg)
+                params, report = soniq.freeze_qat(params, qcfg)
             cfg_now = cnn.CNNConfig(quant=phase2, channels=CNN_CHANNELS,
                                     blocks_per_stage=CNN_BLOCKS)
             opt = adamw.init_state(params)
@@ -143,6 +140,6 @@ def train_cnn(qcfg: QuantConfig, *, t1: int, t2: int, lr: float = 3e-3,
                              blocks_per_stage=CNN_BLOCKS)
     acc = cnn.accuracy(params, jnp.asarray(xte), jnp.asarray(yte), eval_cfg)
     bpp = cnn.bits_per_param(jax.device_get(params), qcfg) \
-        if qcfg.mode != "fp" else 32.0
+        if qcfg.phase is not soniq.Phase.FP else 32.0
     return {"accuracy": acc, "bpp": bpp, "report": report, "params": params,
             "cfg": eval_cfg}

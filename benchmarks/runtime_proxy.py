@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pack, smol
+from repro.core import pack
 from repro.core.qtypes import QuantConfig
 from repro.kernels import ops, ref
 from . import _common

@@ -1,12 +1,15 @@
-"""Quickstart: the SONIQ pipeline on one linear layer, end to end.
+"""Quickstart: the SONIQ lifecycle on one linear layer, end to end — all
+through the ``soniq`` façade.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. Phase I  — noise-injected precision search (trainable s per 16-channel
-              group, bit-count regularizer).
+              group, bit-count regularizer).           soniq.init_linear
 2. Boundary — Problem-1 pattern solve + PatternMatch + precision freeze.
+                                                        soniq.to_qat
 3. Phase II — STE fine-tuning on the frozen {1,2,4}-bit SMOL grid.
 4. Deploy   — channel reorder + bit-pack; packed matmul == QAT matmul.
+                                                        soniq.to_serve
 """
 import sys
 
@@ -16,7 +19,8 @@ import jax                                       # noqa: E402
 import jax.numpy as jnp                          # noqa: E402
 import numpy as np                               # noqa: E402
 
-from repro.core import QuantConfig, noise, schedule, smol  # noqa: E402
+from repro import soniq                          # noqa: E402
+from repro.core import noise                     # noqa: E402
 from repro.kernels import ops                    # noqa: E402
 
 KEY = jax.random.PRNGKey(0)
@@ -24,7 +28,7 @@ K, N, BATCH = 256, 128, 64
 
 
 def main():
-    qcfg = QuantConfig(mode="noise", lam=2e-2)
+    qcfg = soniq.QuantConfig(mode=soniq.Phase.NOISE, lam=2e-2)
     # Teacher with *heterogeneous channel importance* — the structure SONIQ
     # exists to find: the first quarter of input channels carry most of the
     # signal, the rest progressively less.
@@ -39,61 +43,66 @@ def main():
                                (BATCH, K))        # fully determined)
         return xi, xi @ w_true
 
-    params = smol.linear_init(KEY, K, N, qcfg)
+    state = soniq.init_linear(KEY, K, N, qcfg)
     # Start from the pretrained weights (the realistic QAT workflow — the
     # paper fine-tunes trained networks; a from-scratch co-train needs the
     # paper's epoch-scale Phase I).
-    params["w"] = w_true + 0.01 * jax.random.normal(KEY, (K, N))
-    print(f"Phase I: {params['s'].shape[0]} channel groups at "
-          f"s_init={float(params['s'][0]):.3f} "
-          f"(sigma={float(noise.sigma(params['s'][0])):.4f} = 2^-3)")
+    state.params["w"] = w_true + 0.01 * jax.random.normal(KEY, (K, N))
+    s0 = state.params["s"]
+    print(f"Phase I: {s0.shape[0]} channel groups at "
+          f"s_init={float(s0[0]):.3f} "
+          f"(sigma={float(noise.sigma(s0[0])):.4f} = 2^-3)")
 
     @jax.jit
-    def step(params, lr, rng, xi, yi):
-        def loss(p):
-            pred = smol.linear_apply(p, xi, qcfg, rng)
+    def step(state, lr, rng, xi, yi):
+        def loss(s):
+            pred = soniq.apply(s, xi, rng=rng)
             return jnp.mean((pred - yi) ** 2) \
-                + qcfg.lam * noise.bit_penalty(p["s"])
-        g = jax.grad(loss)(params)
+                + qcfg.lam * soniq.bit_penalty(s.params["s"])
+        g = jax.grad(loss)(state).params
         # s gets its own (faster) schedule — paper Phase I runs for epochs.
-        return {"w": params["w"] - lr * g["w"],
-                "s": params["s"] - 8 * lr * g["s"]}
+        return state.replace(params={
+            "w": state.params["w"] - lr * g["w"],
+            "s": state.params["s"] - 8 * lr * g["s"]})
 
     for i in range(800):
         xi, yi = draw(i)
-        params = step(params, 0.03, jax.random.fold_in(KEY, i), xi, yi)
+        state = step(state, 0.03, jax.random.fold_in(KEY, i), xi, yi)
     x, y = draw(999)   # eval batch
 
-    bits = np.asarray(noise.snap_124(noise.precision_from_s(params["s"])))
-    print(f"learned precisions: {dict(zip(*np.unique(bits, return_counts=True)))}")
+    bits = np.asarray(noise.snap_124(
+        noise.precision_from_s(state.params["s"])))
+    print(f"learned precisions: "
+          f"{dict(zip(*np.unique(bits, return_counts=True)))}")
 
     # Boundary: Problem 1 + PatternMatch under the P4 hardware subset.
-    qat_params, report = schedule.pattern_match_params(
-        {"layer": jax.device_get(params)}, qcfg)
+    qat, report = soniq.to_qat(state)
     print(f"PatternMatch: {report['layers'][0]['vectors']} vectors, "
           f"bpp={report['layers'][0]['bpp']:.2f} "
           f"(patterns: {report['allowed'][:4]})")
 
     # Phase II: STE fine-tune (a few steps).
-    qcfg2 = QuantConfig(mode="qat")
-    p2 = qat_params["layer"]
-
     @jax.jit
-    def step2(p):
-        def loss(pp):
-            return jnp.mean((smol.linear_apply(pp, x, qcfg2) - y) ** 2)
-        g = jax.grad(loss, allow_int=True)(p)
-        return {k: (v - 0.01 * g[k] if k == "w" else v) for k, v in p.items()}
+    def step2(s):
+        def loss(ss):
+            return jnp.mean((soniq.apply(ss, x) - y) ** 2)
+        g = jax.grad(loss, allow_int=True)(s).params
+        return s.replace(params={
+            k: (v - 0.01 * g[k] if k == "w" else v)
+            for k, v in s.params.items()})
 
     for _ in range(100):
-        p2 = step2(p2)
+        qat = step2(qat)
 
-    # Deploy: pack + run the Pallas kernel path.
-    sp = smol.serve_params_from_qat(jax.device_get(p2), qcfg2)
-    y_kernel = ops.packed_matmul(x, sp, interpret=True)
-    y_qat = smol.linear_apply(p2, x, qcfg2)
+    # Deploy: pack + run the Pallas kernel path. (The single layer isn't a
+    # stacked scan group, so the trained precisions are kept verbatim —
+    # to_serve's "auto" rebudget only touches stacked leaves.)
+    served = soniq.to_serve(qat)
+    y_kernel = ops.packed_matmul(x, served.params, interpret=True)
+    y_qat = soniq.apply(qat, x)
     err = float(jnp.max(jnp.abs(y_kernel - y_qat)))
-    nbytes = sum(int(np.prod(sp[k].shape)) for k in ("w4", "w2", "w1"))
+    nbytes = sum(int(np.prod(served.params[k].shape))
+                 for k in ("w4", "w2", "w1"))
     print(f"packed size: {nbytes} bytes vs fp32 {K*N*4} "
           f"({K*N*4/nbytes:.1f}x compression)")
     print(f"kernel vs QAT max err: {err:.2e}")

@@ -10,20 +10,17 @@ import sys
 
 sys.path.insert(0, "src")
 
-import dataclasses                              # noqa: E402
-
 import jax                                      # noqa: E402
 import numpy as np                              # noqa: E402
 
+from repro import soniq                         # noqa: E402
 from repro.configs.base import ArchConfig       # noqa: E402
-from repro.core.qtypes import QuantConfig       # noqa: E402
 from repro.data import synthetic                # noqa: E402
-from repro.serve import engine                  # noqa: E402
 from repro.train import loop, state as state_lib  # noqa: E402
 
 
 def main():
-    quant = QuantConfig(mode="qat")
+    quant = soniq.QuantConfig(mode=soniq.Phase.QAT)
     cfg = ArchConfig(
         name="serve-demo", family="dense", num_layers=2, d_model=128,
         num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512, head_dim=32,
@@ -36,11 +33,11 @@ def main():
     result = loop.train(cfg, tcfg, stream.batches())
     params = jax.device_get(result["state"]["params"])
 
-    eng = engine.DecodeEngine(
-        params, cfg, engine.EngineConfig(cache_len=128, temperature=0.0))
+    eng = soniq.DecodeEngine(
+        params, cfg, soniq.EngineConfig(cache_len=128, temperature=0.0))
     fp_bytes = sum(v.size * 4 for v in jax.tree.leaves(params)
                    if hasattr(v, "size"))
-    q_bytes = engine.packed_model_bytes(eng.params)
+    q_bytes = soniq.packed_bytes(eng.params)
     print(f"model bytes: fp32 {fp_bytes:,} -> packed {q_bytes:,} "
           f"({fp_bytes/q_bytes:.1f}x smaller)")
 

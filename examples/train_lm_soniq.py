@@ -17,12 +17,13 @@ sys.path.insert(0, "src")
 import jax                                     # noqa: E402
 import numpy as np                             # noqa: E402
 
+from repro import soniq                        # noqa: E402
 from repro.configs import get_config           # noqa: E402
 from repro.configs.base import ArchConfig      # noqa: E402
-from repro.core.qtypes import QuantConfig      # noqa: E402
-from repro.core import schedule as sched       # noqa: E402
 from repro.data import synthetic               # noqa: E402
 from repro.train import loop, state as state_lib  # noqa: E402
+
+QuantConfig = soniq.QuantConfig
 
 
 def tiny_config(quant: QuantConfig) -> ArchConfig:
@@ -51,7 +52,7 @@ def main():
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    quant = QuantConfig(mode="qat", lam=1e-3)
+    quant = QuantConfig(mode=soniq.Phase.QAT, lam=1e-3)
     if args.arch:
         cfg = get_config(args.arch)
         if args.reduced:
@@ -90,7 +91,8 @@ def main():
     print(f"\nPhase I loss:  {p1[0]:.3f} -> {p1[-1]:.3f}" if p1 else "")
     print(f"Phase II loss: {p2[0]:.3f} -> {p2[-1]:.3f}" if p2 else "")
     if result["pattern_report"]:
-        print(f"deployed bpp: {sched.average_bpp(result['pattern_report']):.2f}"
+        print(f"deployed bpp: "
+              f"{soniq.average_bpp(result['pattern_report']):.2f}"
               f" (vs 32.0 fp32, 4.0 uniform-4)")
 
 

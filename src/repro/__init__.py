@@ -1,3 +1,13 @@
 """SONIQ/SySMOL on TPU: ultra-low fine-grained mixed-precision training and
-serving in JAX. See DESIGN.md."""
-__version__ = "1.0.0"
+serving in JAX. Public API: ``from repro import soniq`` (see DESIGN.md §9)."""
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # Lazy: `from repro import soniq` loads the façade (which pulls in the
+    # model libraries) only when asked for, keeping `import repro.core.*`
+    # light for kernels/tests.
+    if name in ("soniq", "api"):
+        import importlib
+        return importlib.import_module(".api", __name__)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,58 @@
+"""``soniq`` — the single public façade over the SONIQ lifecycle.
+
+    from repro import soniq
+
+    state = soniq.init(model_cfg, soniq.QuantConfig(mode="noise"), rng=key)
+    logits = soniq.apply(state, tokens, rng=rng)       # Phase I forward
+    qat, report = soniq.to_qat(state)                  # freeze precisions
+    packed = soniq.to_serve(qat)                       # reorder + bit-pack
+    y = soniq.apply(packed, tokens)                    # packed forward
+
+Typed phases (``soniq.Phase.FP/NOISE/QAT/SERVE``) replace the old
+string-mode branching; the lifecycle transforms are explicit, composable
+pytree functions (see ``repro.api.transforms``); serving runs through
+``soniq.DecodeEngine``. DESIGN.md §9 has the full API reference and the
+migration table from the legacy entry points.
+"""
+from repro.core.noise import bit_penalty                       # noqa: F401
+from repro.core.qtypes import (ALLOWED_BITS, BLOCK_SIZE,       # noqa: F401
+                               GROUP_SIZE, GROUPS_PER_BLOCK, FP32, P4, P8,
+                               P45, U2, U4, QuantConfig)
+from repro.core.smol import bit_penalty_of_params              # noqa: F401
+
+from .phases import Phase, PhaseSpec                           # noqa: F401
+from .state import LinearSpec, SoniqState                      # noqa: F401
+from . import transforms                                       # noqa: F401
+from .transforms import (apply, average_bpp, convert_linear,   # noqa: F401
+                         convert_tree, freeze_qat, init, init_linear,
+                         pack_conv, pack_linear, rebudget_pbits, to_qat,
+                         to_serve, tree_map_layers, with_phase)
+
+__all__ = [
+    # configs & phases
+    "ALLOWED_BITS", "BLOCK_SIZE", "GROUP_SIZE", "GROUPS_PER_BLOCK",
+    "FP32", "P4", "P8", "P45", "U2", "U4", "QuantConfig",
+    "Phase", "PhaseSpec", "LinearSpec", "SoniqState", "with_phase",
+    # lifecycle
+    "init", "init_linear", "apply", "to_qat", "to_serve",
+    # pytree building blocks
+    "freeze_qat", "rebudget_pbits", "pack_linear", "pack_conv",
+    "convert_linear", "convert_tree", "tree_map_layers",
+    # losses / reports
+    "bit_penalty", "bit_penalty_of_params", "average_bpp",
+    # serving (lazy — see __getattr__)
+    "DecodeEngine", "EngineConfig", "packed_bytes", "transforms",
+]
+
+_SERVE_EXPORTS = {"DecodeEngine": "DecodeEngine",
+                  "EngineConfig": "EngineConfig",
+                  "packed_bytes": "packed_model_bytes"}
+
+
+def __getattr__(name):
+    # The decode engine imports this package for the lifecycle transforms;
+    # re-export it lazily to keep the dependency one-way at import time.
+    if name in _SERVE_EXPORTS:
+        from repro.serve import engine
+        return getattr(engine, _SERVE_EXPORTS[name])
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

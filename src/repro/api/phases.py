@@ -1,0 +1,11 @@
+"""Re-export of the typed lifecycle phases at the façade level.
+
+The implementation lives in ``repro.core.phases`` (dependency-light so
+every core/model module can import it); the public import path is
+
+    from repro import soniq
+    soniq.Phase.QAT
+"""
+from repro.core.phases import Phase, PhaseSpec  # noqa: F401
+
+__all__ = ["Phase", "PhaseSpec"]

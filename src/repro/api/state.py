@@ -1,0 +1,74 @@
+"""Typed lifecycle state for the ``soniq`` façade.
+
+A :class:`SoniqState` bundles a parameter pytree with the phase it is in
+and the (static, hashable) model config that interprets it. It is itself a
+registered pytree — only ``params`` are leaves; phase and config ride as
+static aux data — so states pass through ``jax.jit`` / ``jax.grad`` /
+optimizer updates unchanged:
+
+    state = soniq.init(cfg, rng=key)            # Phase.NOISE
+    grads = jax.grad(lambda s: loss(soniq.apply(s, x)))(state)
+    qat, report = soniq.to_qat(state)           # Phase.QAT  (host-side)
+    packed = soniq.to_serve(qat)                # Phase.SERVE
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.phases import Phase, PhaseSpec
+from repro.core.qtypes import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Model config for the single-SmolLinear case (quickstart / unit
+    tests): one [K, N] quantized matmul."""
+    k: int
+    n: int
+    use_bias: bool = False
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SoniqState:
+    """params + the phase that interprets them + the model config.
+
+    ``model_cfg`` is an ``ArchConfig`` (LM), ``CNNConfig`` (paper CNNs) or
+    :class:`LinearSpec`; it must stay hashable (it is jit-static aux data).
+    """
+    phase: PhaseSpec
+    params: Any
+    model_cfg: Any
+
+    # ------------------------------------------------------------ pytree ----
+    def tree_flatten(self):
+        return (self.params,), (self.phase, self.model_cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(phase=aux[0], params=children[0], model_cfg=aux[1])
+
+    # ------------------------------------------------------------ config ----
+    @property
+    def qcfg(self) -> QuantConfig:
+        """The QuantConfig with this state's phase applied."""
+        return self.model_cfg.quant.with_mode(self.phase)
+
+    @property
+    def forward_cfg(self):
+        """The model config with this state's phase applied to its quant
+        field — what the layer libraries consume."""
+        return dataclasses.replace(self.model_cfg, quant=self.qcfg)
+
+    def replace(self, **kw) -> "SoniqState":
+        if "phase" in kw:
+            kw["phase"] = Phase.from_mode(kw["phase"])
+        return dataclasses.replace(self, **kw)
+
+    def __repr__(self) -> str:
+        name = getattr(self.model_cfg, "name", type(self.model_cfg).__name__)
+        return f"SoniqState({self.phase!r}, model={name})"

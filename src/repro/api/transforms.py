@@ -1,0 +1,279 @@
+"""Composable pytree transforms between SONIQ lifecycle phases.
+
+State-level (the public ``soniq`` surface):
+
+    init / init_linear   build a SoniqState in the phase its config selects
+    apply                forward pass (dispatches LM / CNN / single linear)
+    to_qat               Phase I -> Phase II  (Problem-1 + PatternMatch +
+                         precision freeze; host-side)
+    to_serve             Phase II -> deployment (rebudget -> channel
+                         reorder -> bit-pack)
+
+Pytree-level building blocks (same transforms without the SoniqState
+wrapper — what the train loop and the decode engine compose):
+
+    freeze_qat           (noise params, qcfg) -> (qat params, report)
+    rebudget_pbits       project trained per-group precisions onto the
+                         static segment budget (scan groups must share
+                         packed shapes)
+    pack_linear          (w, pbits) -> packed serve leaf  [K, N]
+    pack_conv            (w, pbits) -> packed serve leaf  [kh, kw, Cin, Cout]
+    convert_linear       rebudget + pack one linear leaf
+    convert_tree         walk a whole QAT pytree (stacked scan/expert dims
+                         and conv leaves included)
+
+These absorb the converters that used to live in ``repro.core.smol``
+(``serve_params_from_qat``) and ``repro.serve.engine`` (``rebudget_pbits``,
+``serve_convert``); the old names remain as deprecation shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as pack_lib
+from repro.core import patterns as patterns_lib
+from repro.core import quant
+from repro.core import schedule as schedule_lib
+from repro.core import smol
+from repro.core.phases import Phase
+from repro.core.qtypes import QuantConfig
+from repro.models import cnn, lm
+
+from .state import LinearSpec, SoniqState
+
+average_bpp = schedule_lib.average_bpp
+
+
+# ---------------------------------------------------------------------------
+# Config helpers.
+# ---------------------------------------------------------------------------
+
+def with_phase(cfg, phase):
+    """Copy of a QuantConfig / ArchConfig / CNNConfig / LinearSpec with the
+    given lifecycle phase applied (string or Phase object)."""
+    phase = Phase.from_mode(phase)
+    if isinstance(cfg, QuantConfig):
+        return cfg.with_mode(phase)
+    if hasattr(cfg, "with_quant_mode"):      # ArchConfig
+        return cfg.with_quant_mode(phase)
+    return dataclasses.replace(cfg, quant=cfg.quant.with_mode(phase))
+
+
+# ---------------------------------------------------------------------------
+# State lifecycle.
+# ---------------------------------------------------------------------------
+
+def init(model_cfg, qcfg: Optional[QuantConfig] = None, *, rng) -> SoniqState:
+    """Build a :class:`SoniqState` in the phase its quant config selects.
+
+    ``model_cfg`` is an ``ArchConfig`` (LM), ``CNNConfig`` or
+    :class:`LinearSpec`; ``qcfg`` (optional) overrides its quant field.
+    """
+    if qcfg is not None:
+        model_cfg = dataclasses.replace(model_cfg, quant=qcfg)
+    phase = model_cfg.quant.phase
+    if isinstance(model_cfg, LinearSpec):
+        params = smol.linear_init(rng, model_cfg.k, model_cfg.n,
+                                  model_cfg.quant,
+                                  use_bias=model_cfg.use_bias)
+    elif isinstance(model_cfg, cnn.CNNConfig):
+        params = cnn.cnn_init(rng, model_cfg)
+    else:
+        params = lm.init_params(rng, model_cfg)
+    return SoniqState(phase, params, model_cfg)
+
+
+def init_linear(rng, k: int, n: int, qcfg: QuantConfig, *,
+                use_bias: bool = False) -> SoniqState:
+    """Single-SmolLinear state (quickstart / unit tests)."""
+    return init(LinearSpec(k=k, n=n, use_bias=use_bias, quant=qcfg), rng=rng)
+
+
+def apply(state: SoniqState, x=None, *, rng: Optional[jax.Array] = None,
+          **inputs):
+    """Forward pass of a state in its current phase.
+
+    * LinearSpec: ``apply(state, x)`` -> ``[..., N]``
+    * CNNConfig:  ``apply(state, images)`` -> logits
+    * ArchConfig: ``apply(state, tokens)`` (or ``embeds=/frames=/
+      positions=`` keywords) -> fp32 logits ``[B, S, V]``
+    """
+    cfg = state.forward_cfg
+    if isinstance(state.model_cfg, LinearSpec):
+        return smol.linear_apply(state.params, x, cfg.quant, rng)
+    if isinstance(state.model_cfg, cnn.CNNConfig):
+        return cnn.cnn_apply(state.params, x, cfg, rng)
+    hidden, _ = lm.forward(
+        state.params, cfg, tokens=inputs.get("tokens", x),
+        embeds=inputs.get("embeds"), frames=inputs.get("frames"),
+        positions=inputs.get("positions"), rng=rng)
+    return lm.logits(state.params, cfg, hidden)
+
+
+def to_qat(state: SoniqState) -> Tuple[SoniqState, Dict]:
+    """Phase I -> Phase II boundary: freeze trained ``s`` into per-group
+    ``pbits`` (Problem-1 solve + PatternMatch; host-side, not jittable).
+    Returns (qat_state, pattern_report)."""
+    if state.phase is not Phase.NOISE:
+        raise ValueError(f"to_qat expects {Phase.NOISE!r}, got "
+                         f"{state.phase!r}")
+    params, report = freeze_qat(jax.device_get(state.params), state.qcfg)
+    return state.replace(phase=Phase.QAT, params=params), report
+
+
+def to_serve(state: SoniqState, *, rebudget="auto") -> SoniqState:
+    """Phase II -> deployment: rebudget (where packed shapes must be
+    shared), reorder channels (paper Obs. 4) and bit-pack every quantized
+    leaf. Host-side. ``rebudget``: True (always), False (never — trained
+    precisions kept verbatim; stacked trees then require identical
+    per-slice distributions) or "auto" (only stacked scan/expert leaves,
+    whose packed buffers must share shapes)."""
+    if state.phase is not Phase.QAT:
+        raise ValueError(f"to_serve expects {Phase.QAT!r}, got "
+                         f"{state.phase!r}")
+    sp = convert_tree(jax.device_get(state.params), state.model_cfg.quant,
+                      rebudget=rebudget)
+    return state.replace(phase=Phase.SERVE, params=sp)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level transforms.
+# ---------------------------------------------------------------------------
+
+def tree_map_layers(fn, tree):
+    """Map ``fn`` over every dict node of a params pytree (returning a new
+    dict stops recursion into that node) — the layer-walking primitive the
+    lifecycle transforms are built on."""
+    return smol._tree_map_dicts(fn, tree)
+
+
+def freeze_qat(params, qcfg: QuantConfig) -> Tuple[Any, Dict]:
+    """(noise params, qcfg) -> (qat params, pattern report). Wraps the
+    Phase I -> II boundary transform (paper Alg. 3)."""
+    return schedule_lib.pattern_match_params(params, qcfg)
+
+
+def rebudget_pbits(pbits: np.ndarray, w: np.ndarray,
+                   qcfg: QuantConfig) -> np.ndarray:
+    """Project trained per-group precisions onto the static segment budget
+    (counts from qcfg.mix) preserving the trained ranking; ties broken by
+    group abs-max (importance proxy). Identity when the trained
+    distribution already matches the budget counts."""
+    n = pbits.shape[0]
+    k = w.shape[0]
+    g = k // n
+    counts = qcfg.group_pbits(k)
+    n4 = int((counts == 4).sum())
+    n2 = int((counts == 2).sum())
+    mag = np.abs(w).reshape(n, g, -1).max(axis=(1, 2))
+    order = np.lexsort((-mag, -pbits.astype(np.int64)))  # pbits desc, mag desc
+    out = np.empty(n, np.int8)
+    out[order[:n4]] = 4
+    out[order[n4:n4 + n2]] = 2
+    out[order[n4 + n2:]] = 1
+    return out
+
+
+def pack_linear(params: Dict, qcfg: QuantConfig) -> Dict:
+    """Offline deploy conversion of one [K, N] linear: trained (w, pbits)
+    -> channel-reordered packed buffers + metadata. The returned dict is a
+    valid SmolLinear serve params pytree (Phase.SERVE.param_schema)."""
+    w = np.asarray(params["w"], np.float32)
+    pbits = np.asarray(params["pbits"])
+    k, _ = w.shape
+    g = qcfg.eff_group_size(k)
+    gperm = patterns_lib.reorder_channels(pbits)
+    perm = patterns_lib.expand_group_perm(gperm, g)
+    w_sorted = w[perm]
+    pbits_sorted = pbits[gperm]
+    if qcfg.scale_mode == "none":
+        scales = None
+    else:
+        scales = np.asarray(quant.per_group_weight_scale(
+            jnp.asarray(w_sorted), g))
+    packed = pack_lib.quantize_pack_weight(jnp.asarray(w_sorted),
+                                           pbits_sorted, scales, g)
+    out = {
+        "w4": packed["w4"], "w2": packed["w2"], "w1": packed["w1"],
+        "perm": jnp.asarray(perm, jnp.int32),
+        "pbits_sorted": jnp.asarray(pbits_sorted),
+        "wscale": None if scales is None else jnp.asarray(scales),
+    }
+    if "b" in params:
+        out["b"] = jnp.asarray(params["b"])
+    return out
+
+
+def pack_conv(params: Dict, qcfg: QuantConfig) -> Dict:
+    """Deploy conversion of one conv [kh, kw, Cin, Cout] quantized along
+    Cin (paper's input-channel granularity). Packed buffers keep the
+    spatial/output structure ([rows, kh, kw, Cout]) so the serve forward
+    can reconstruct the kernel without extra metadata."""
+    w = np.asarray(params["w"], np.float32)
+    kh, kw, cin, cout = w.shape
+    w2d = {"w": np.moveaxis(w, 2, 0).reshape(cin, -1),
+           "pbits": params["pbits"]}
+    out = pack_linear(w2d, qcfg)
+    for name in ("w4", "w2", "w1"):
+        out[name] = out[name].reshape((-1, kh, kw, cout))
+    if "b" in params:
+        out["b"] = jnp.asarray(params["b"])
+    return out
+
+
+def convert_linear(params: Dict, qcfg: QuantConfig, *,
+                   rebudget: bool = True) -> Dict:
+    """Rebudget (optional) + pack one [K, N] linear leaf."""
+    w = np.asarray(params["w"], np.float32)
+    pbits = np.asarray(params["pbits"])
+    if rebudget:
+        pbits = rebudget_pbits(pbits, w, qcfg)
+    leaf = {"w": w, "pbits": pbits}
+    if params.get("b") is not None:
+        leaf["b"] = params["b"]
+    return pack_linear(leaf, qcfg)
+
+
+def convert_tree(params, qcfg: QuantConfig, *, rebudget="auto"):
+    """QAT pytree -> serve pytree. Handles stacked scan/expert leading dims
+    (packed per slice then re-stacked — these are always rebudgeted unless
+    ``rebudget=False``, since slices must share packed shapes) and conv
+    leaves ([kh, kw, Cin, Cout] with 1-D pbits)."""
+    assert rebudget in (True, False, "auto"), rebudget
+
+    def fix(node):
+        if not (isinstance(node, dict) and "w" in node and "pbits" in node):
+            return node
+        w = np.asarray(node["w"])
+        pb = np.asarray(node["pbits"])
+        b = np.asarray(node["b"]) if "b" in node else None
+        if w.ndim == 4 and pb.ndim == 1:          # conv [kh, kw, Cin, Cout]
+            leaf = {"w": w, "pbits": rebudget_pbits(
+                pb, np.moveaxis(w, 2, 0).reshape(w.shape[2], -1), qcfg)
+                if rebudget is True else pb}
+            if b is not None:
+                leaf["b"] = b
+            return pack_conv(leaf, qcfg)
+        if w.ndim == 2:
+            leaf = {"w": w, "pbits": pb, "b": b}
+            return convert_linear(leaf, qcfg, rebudget=rebudget is True)
+        # Stacked scan/expert dims: pack per slice, re-stack.
+        reb = rebudget in (True, "auto")
+        lead = w.shape[:-2]
+        flat_w = w.reshape((-1,) + w.shape[-2:])
+        flat_pb = pb.reshape((-1, pb.shape[-1]))
+        flat_b = b.reshape((-1, b.shape[-1])) if b is not None else None
+        converted = [
+            convert_linear({"w": flat_w[i], "pbits": flat_pb[i],
+                            "b": None if flat_b is None else flat_b[i]},
+                           qcfg, rebudget=reb)
+            for i in range(flat_w.shape[0])]
+        return jax.tree.map(lambda *xs: jnp.stack(xs).reshape(
+            lead + xs[0].shape), *converted)
+
+    return tree_map_layers(fix, params)

@@ -73,6 +73,11 @@ class ArchConfig:
     def d_inner(self) -> int:
         return self.ssm_expand * self.d_model
 
+    def with_quant_mode(self, mode) -> "ArchConfig":
+        """Copy with the quant lifecycle phase swapped (a mode string or a
+        ``repro.core.phases.Phase`` object)."""
+        return dataclasses.replace(self, quant=self.quant.with_mode(mode))
+
     def layer_plan(self) -> Plan:
         l = self.num_layers
         if self.family == "audio":

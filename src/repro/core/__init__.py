@@ -1,10 +1,12 @@
 """SONIQ core: the paper's contribution as a composable JAX module."""
+from .phases import Phase, PhaseSpec
 from .qtypes import (ALLOWED_BITS, BLOCK_SIZE, GROUP_SIZE, GROUPS_PER_BLOCK,
                      FP32, P4, P8, P45, U2, U4, QuantConfig)
-from . import noise, pack, patterns, quant, schedule, smol
+from . import noise, pack, patterns, phases, quant, schedule, smol
 
 __all__ = [
     "ALLOWED_BITS", "BLOCK_SIZE", "GROUP_SIZE", "GROUPS_PER_BLOCK",
-    "FP32", "P4", "P8", "P45", "U2", "U4", "QuantConfig",
-    "noise", "pack", "patterns", "quant", "schedule", "smol",
+    "FP32", "P4", "P8", "P45", "U2", "U4", "Phase", "PhaseSpec",
+    "QuantConfig",
+    "noise", "pack", "patterns", "phases", "quant", "schedule", "smol",
 ]

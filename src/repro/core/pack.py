@@ -44,6 +44,33 @@ def unpack_codes(b, p: int, k: int):
     return u.reshape((k,) + b.shape[1:])
 
 
+def dequant_packed_carriers(bufs: Dict, cdt, wscale=None,
+                            group_size: int = 16):
+    """Shared serve-path arithmetic: 2-D packed carriers
+    ``{"w4": [K4*4//8, M], "w2": ..., "w1": ...}`` -> dequantized [K, M]
+    grid values in the compute dtype ``cdt`` (uint8 loads -> shift/mask
+    unpack -> affine dequant ``v = (2u - (2^p - 1)) * 2^(1-p)``), with
+    optional per-group ``wscale`` applied. Both ``smol`` (linear) and the
+    CNN conv serve forwards route through this — the grid/scale convention
+    lives here once."""
+    parts = []
+    for name, p, vals_per_byte in (("w4", 4, 2), ("w2", 2, 4),
+                                   ("w1", 1, 8)):
+        kp = bufs[name].shape[0] * vals_per_byte
+        if kp == 0:
+            continue
+        u = unpack_codes(bufs[name], p, kp).astype(cdt)
+        parts.append((2.0 * u - jnp.asarray(2 ** p - 1, cdt))
+                     * jnp.asarray(2.0 ** (1 - p), cdt))
+    wd = jnp.concatenate(parts, axis=0)
+    if wscale is not None:
+        k = wd.shape[0]
+        s_full = jnp.repeat(wscale.astype(cdt), group_size,
+                            total_repeat_length=k)
+        wd = wd * s_full[:, None]
+    return wd
+
+
 def quantize_pack_weight(w, pbits, scale=None, group_size=16) -> Dict:
     """Quantize a [K, N] weight whose K-groups carry precisions ``pbits``
     (values in {1,2,4}, already *sorted descending* / segment-contiguous) and

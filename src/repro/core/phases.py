@@ -1,0 +1,157 @@
+"""Typed SONIQ lifecycle phases (see DESIGN.md §9).
+
+The paper's pipeline is a *lifecycle*:
+
+    FP ──► NOISE ──► QAT ──► SERVE
+    (baseline)  Phase I     Phase II    packed deployment
+
+Historically the repo encoded the current phase as ``QuantConfig.mode``
+(a string) and branched on it inside every layer primitive. This module
+makes the phase a first-class object: each :class:`PhaseSpec` singleton
+carries
+
+  * its *param schema* — which arrays a quantized SmolLinear leaf holds in
+    that phase (``param_schema`` returns ShapeDtypeStructs, usable for
+    eval_shape / dry-run sharding without allocation),
+  * its *apply rules* — the forward implementations layer libraries
+    register against it (``defrule`` / ``rule``), so dispatch is by phase
+    identity rather than string comparison,
+  * lifecycle metadata (``trainable``, ``needs_rng``, ``next`` — the legal
+    forward transition).
+
+The public lifecycle transforms between phases live in
+``repro.api.transforms`` (``soniq.to_qat`` / ``soniq.to_serve``); this
+module stays dependency-light so every core/model module can import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# (phase name, primitive name) -> apply rule. Filled by the layer libraries
+# (repro.core.smol registers the "linear" rules at import time).
+_RULES: Dict[Tuple[str, str], Callable] = {}
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class PhaseSpec:
+    """One lifecycle phase. Singletons live on :class:`Phase`."""
+
+    name: str                      # the legacy QuantConfig.mode string
+    index: int                     # position in the lifecycle (FP=0 .. SERVE=3)
+    trainable: bool                # does the phase support a backward pass?
+    needs_rng: bool                # does apply() consume an rng (noise draw)?
+    # Keys (beyond "w"/"b") that mark a quantized linear leaf as belonging
+    # to this phase.
+    learned_keys: Tuple[str, ...]
+
+    def __repr__(self) -> str:
+        return f"Phase.{self.name.upper()}"
+
+    def __eq__(self, other) -> bool:
+        # Phases are singletons, but legacy callers compare against the
+        # mode string ("noise" == Phase.NOISE); keep that contract.
+        if isinstance(other, str):
+            return self.name == other
+        return self is other
+
+    def __hash__(self) -> int:
+        return hash(self.name)      # consistent with the string equality
+
+    # ------------------------------------------------------ apply rules ----
+    def defrule(self, prim: str):
+        """Decorator: register the forward implementation of ``prim``
+        (e.g. "linear") for this phase."""
+        def deco(fn):
+            _RULES[(self.name, prim)] = fn
+            return fn
+        return deco
+
+    def rule(self, prim: str) -> Callable:
+        try:
+            return _RULES[(self.name, prim)]
+        except KeyError:
+            raise NotImplementedError(
+                f"no '{prim}' apply rule registered for {self!r}") from None
+
+    # ----------------------------------------------------- param schema ----
+    def param_schema(self, k: int, n: int, qcfg, *, use_bias: bool = False,
+                    dtype=jnp.float32) -> Dict:
+        """ShapeDtypeStruct stand-ins for a [K, N] quantized linear in this
+        phase (no allocation). ``qcfg`` is a :class:`QuantConfig`; group
+        geometry comes from it (single source of truth)."""
+        sd = jax.ShapeDtypeStruct
+        out: Dict = {}
+        if self.name != "serve":
+            out["w"] = sd((k, n), dtype)
+        if self.name == "noise":
+            out["s"] = sd((qcfg.num_groups(k),), jnp.float32)
+        elif self.name == "qat":
+            out["pbits"] = sd((qcfg.num_groups(k),), jnp.int8)
+        elif self.name == "serve":
+            k4, k2, k1 = qcfg.segments(k)
+            ng = qcfg.num_groups(k)
+            out.update({
+                "w4": sd((k4 // 2, n), jnp.uint8),
+                "w2": sd((k2 // 4, n), jnp.uint8),
+                "w1": sd((k1 // 8, n), jnp.uint8),
+                "perm": sd((k,), jnp.int32),
+                "pbits_sorted": sd((ng,), jnp.int8),
+                "wscale": None if qcfg.scale_mode == "none"
+                          else sd((ng,), jnp.float32),
+            })
+        if use_bias:
+            out["b"] = sd((n,), dtype)
+        return out
+
+    def owns_leaf(self, leaf) -> bool:
+        """Does this params dict look like a quantized linear of this phase?
+        (FP matches a plain-weight leaf with no learned quant state.)"""
+        if not isinstance(leaf, dict):
+            return False
+        if self.name == "fp":
+            return "w" in leaf and not any(
+                k in leaf for p in Phase.ALL for k in p.learned_keys)
+        return all(k in leaf for k in self.learned_keys)
+
+    @property
+    def next(self) -> Optional["PhaseSpec"]:
+        """The legal forward transition, or None for the terminal phase."""
+        order = Phase.ALL
+        return order[self.index + 1] if self.index + 1 < len(order) else None
+
+
+class Phase:
+    """Namespace of the four lifecycle phase singletons."""
+
+    FP = PhaseSpec("fp", 0, trainable=True, needs_rng=False,
+                   learned_keys=())
+    NOISE = PhaseSpec("noise", 1, trainable=True, needs_rng=True,
+                      learned_keys=("s",))
+    QAT = PhaseSpec("qat", 2, trainable=True, needs_rng=False,
+                    learned_keys=("pbits",))
+    SERVE = PhaseSpec("serve", 3, trainable=False, needs_rng=False,
+                      learned_keys=("w4", "w2", "w1", "perm",
+                                    "pbits_sorted"))
+
+    ALL: Tuple[PhaseSpec, ...] = ()        # filled below
+
+    @staticmethod
+    def from_mode(mode) -> PhaseSpec:
+        """Coerce a mode string (or a PhaseSpec, passed through) to the
+        phase singleton."""
+        if isinstance(mode, PhaseSpec):
+            return mode
+        try:
+            return _BY_NAME[mode]
+        except KeyError:
+            raise ValueError(
+                f"unknown phase {mode!r}; expected one of "
+                f"{sorted(_BY_NAME)}") from None
+
+
+Phase.ALL = (Phase.FP, Phase.NOISE, Phase.QAT, Phase.SERVE)
+_BY_NAME = {p.name: p for p in Phase.ALL}

@@ -15,6 +15,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
+import numpy as np
+
+from .phases import Phase, PhaseSpec
+
 GROUP_SIZE = 16          # channels per precision group (paper Obs. 5)
 GROUPS_PER_BLOCK = 8     # groups per 128-channel block (paper's 128-bit vector)
 BLOCK_SIZE = GROUP_SIZE * GROUPS_PER_BLOCK
@@ -68,25 +72,65 @@ class QuantConfig:
     prequantized: bool = False
 
     def __post_init__(self):
+        if isinstance(self.mode, PhaseSpec):   # accept QuantConfig(mode=Phase.QAT)
+            object.__setattr__(self, "mode", self.mode.name)
         assert self.mode in ("fp", "noise", "qat", "serve"), self.mode
         assert self.scale_mode in ("none", "per_group"), self.scale_mode
         assert self.act_scale_mode in ("none", "per_tensor"), self.act_scale_mode
         assert abs(sum(self.mix) - 1.0) < 1e-6, self.mix
         assert self.group_size % 2 == 0
 
+    # ----------------------------------------------------------- phases ----
+    @property
+    def phase(self) -> PhaseSpec:
+        """The typed lifecycle phase this config selects (Phase.FP/NOISE/
+        QAT/SERVE)."""
+        return Phase.from_mode(self.mode)
+
+    def with_mode(self, mode) -> "QuantConfig":
+        """Copy of this config in another phase (string or Phase object)."""
+        return dataclasses.replace(self, mode=Phase.from_mode(mode).name)
+
+    # --------------------------------------------------- group geometry ----
+    def eff_group_size(self, k: int) -> int:
+        """Effective precision-group size for a K-dim of ``k`` channels: a
+        layer narrower than ``group_size`` forms one whole group."""
+        return k if k < self.group_size else self.group_size
+
+    def num_groups(self, k: int) -> int:
+        g = self.eff_group_size(k)
+        assert k % g == 0, f"K={k} not a multiple of group size {g}"
+        return k // g
+
+    def group_counts(self, k: int) -> Tuple[int, int, int]:
+        """(#4-bit, #2-bit, #1-bit) groups implementing ``mix`` over the
+        ``num_groups(k)`` groups of a K-dim (4s first — segment order).
+        A layer narrower than ``group_size`` is a single group held at 4
+        bits: the sub-byte carriers of the low-precision segments need not
+        divide such a k, and a narrow layer is too small to be worth the
+        risk of mix-rounding it to 1 bit."""
+        if k < self.group_size:
+            return 1, 0, 0
+        n = self.num_groups(k)
+        g4 = min(int(round(self.mix[0] * n)), n)
+        g2 = min(int(round(self.mix[1] * n)), n - g4)
+        return g4, g2, n - g4 - g2
+
+    def group_pbits(self, k: int) -> np.ndarray:
+        """Static per-group precisions implementing ``mix``, sorted 4->2->1
+        (segment-contiguous). Replaced by trained precisions after Phase I."""
+        g4, g2, g1 = self.group_counts(k)
+        return np.array([4] * g4 + [2] * g2 + [1] * g1, np.int8)
+
     def segments(self, k: int) -> Tuple[int, int, int]:
         """Split ``k`` input channels into (K4, K2, K1) — contiguous runs of
-        uniform precision, each a multiple of ``group_size`` (and the total
-        exactly ``k``). Mirrors the paper's post-training channel reordering.
+        uniform precision, each a multiple of ``eff_group_size(k)`` (and the
+        total exactly ``k``). Mirrors the paper's post-training channel
+        reordering. ``k < group_size`` forms a single group and lands
+        entirely in one segment (consistent with ``group_pbits``).
         """
-        g = self.group_size
-        assert k % g == 0, f"K={k} not a multiple of group size {g}"
-        n_groups = k // g
-        g4 = int(round(self.mix[0] * n_groups))
-        g2 = int(round(self.mix[1] * n_groups))
-        g4 = min(g4, n_groups)
-        g2 = min(g2, n_groups - g4)
-        g1 = n_groups - g4 - g2
+        g = self.eff_group_size(k)
+        g4, g2, g1 = self.group_counts(k)
         return g4 * g, g2 * g, g1 * g
 
     def bits_per_param(self, k: Optional[int] = None) -> float:

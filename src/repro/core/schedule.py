@@ -5,7 +5,7 @@ Boundary (step t1):          per-layer Problem-1 solve + PatternMatch +
                              channel-precision freeze — host-side transform
                              of the parameter pytree ("noise" -> "qat").
 Phase II (steps [t1, t2)):   STE fine-tuning under frozen precisions.
-Deploy:                      "qat" -> "serve" packing (smol.serve_params_from_qat).
+Deploy:                      Phase.QAT -> Phase.SERVE packing (soniq.to_serve).
 """
 from __future__ import annotations
 
@@ -19,6 +19,7 @@ import numpy as np
 from . import noise as noise_lib
 from . import patterns as patterns_lib
 from . import smol
+from .phases import Phase, PhaseSpec
 from .qtypes import QuantConfig
 
 
@@ -27,8 +28,8 @@ class PhaseSchedule:
     t1: int          # Phase I steps (paper: T1 epochs)
     t2: int          # total steps   (paper: T2 epochs)
 
-    def phase(self, step: int) -> str:
-        return "noise" if step < self.t1 else "qat"
+    def phase(self, step: int) -> PhaseSpec:
+        return Phase.NOISE if step < self.t1 else Phase.QAT
 
 
 def _iter_s_layers(params, path=()):  # yield (path, dict) holding (w, s)
@@ -47,7 +48,7 @@ def collect_histograms(params, qcfg: QuantConfig) -> List[Tuple[int, int, int]]:
     out = []
     for _, node in _iter_s_layers(params):
         s = np.asarray(node["s"])
-        g = smol.eff_group_size(node["w"].shape[-2], qcfg.group_size)
+        g = qcfg.eff_group_size(node["w"].shape[-2])
         for s_row in s.reshape(-1, s.shape[-1]):
             out.append(patterns_lib.histogram_from_s(s_row, g))
     return out
@@ -75,7 +76,7 @@ def pattern_match_params(params, qcfg: QuantConfig):
             return node
         new = {k: v for k, v in node.items() if k != "s"}
         s = np.asarray(node["s"])
-        g = smol.eff_group_size(node["w"].shape[-2], qcfg.group_size)
+        g = qcfg.eff_group_size(node["w"].shape[-2])
         s2 = s.reshape(-1, s.shape[-1])
         pb_rows = []
         for s_row in s2:

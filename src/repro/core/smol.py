@@ -1,21 +1,24 @@
 """SmolLinear — the universal quantized linear primitive.
 
 Every matmul in every model in this framework goes through ``linear_apply``.
-The ``QuantConfig.mode`` selects:
+The lifecycle phase (``QuantConfig.phase``) selects the forward rule:
 
-  fp     y = x @ W                                  (baseline)
-  noise  Phase I:  y = (x + sx*sigma(s)*eps) @ clip(W + sw*sigma(s)*eps')
-  qat    Phase II: y = fq(x; p, sx) @ fq(W; p, sw)  (clipped STE)
-  serve  y = q(x) @ unpack_dequant(Wpacked)         (packed 1/2/4-bit carriers)
+  Phase.FP     y = x @ W                                  (baseline)
+  Phase.NOISE  Phase I:  y = (x + sx*sigma(s)*eps) @ clip(W + sw*sigma(s)*eps')
+  Phase.QAT    Phase II: y = fq(x; p, sx) @ fq(W; p, sw)  (clipped STE)
+  Phase.SERVE  y = q(x) @ unpack_dequant(Wpacked)         (packed 1/2/4-bit)
 
-with per-16-channel-group precisions p on the K (input/reduction) dim shared
-by weights and activations (paper Obs. 3), segments [K4|K2|K1] contiguous
-(paper Obs. 4), and fp32 accumulation (TPU adaptation of the paper's 16.6
-fixed-point accumulator).
+Each rule is registered against its :class:`~repro.core.phases.PhaseSpec`
+(``@Phase.X.defrule("linear")``) so dispatch is by phase identity, not
+string comparison; ``repro.api`` exposes the typed lifecycle transforms
+between phases. Per-16-channel-group precisions p on the K (input/reduction)
+dim are shared by weights and activations (paper Obs. 3), segments
+[K4|K2|K1] contiguous (paper Obs. 4), fp32 accumulation (TPU adaptation of
+the paper's 16.6 fixed-point accumulator).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -24,12 +27,13 @@ import numpy as np
 
 from . import noise as noise_lib
 from . import pack as pack_lib
-from . import patterns as patterns_lib
 from . import quant
+from .phases import Phase
 from .qtypes import QuantConfig
 
 
 def num_groups(k: int, group_size: int) -> int:
+    """Compat wrapper — prefer ``QuantConfig.num_groups(k)``."""
     if k < group_size:
         return 1
     assert k % group_size == 0, (k, group_size)
@@ -37,19 +41,13 @@ def num_groups(k: int, group_size: int) -> int:
 
 
 def eff_group_size(k: int, group_size: int) -> int:
+    """Compat wrapper — prefer ``QuantConfig.eff_group_size(k)``."""
     return k if k < group_size else group_size
 
 
 def init_pbits_from_mix(k: int, qcfg: QuantConfig) -> np.ndarray:
-    """Static per-group precisions implementing qcfg.mix, sorted 4 -> 2 -> 1
-    (segment-contiguous). Replaced by trained precisions after Phase I."""
-    g = eff_group_size(k, qcfg.group_size)
-    n = num_groups(k, g)
-    g4 = int(round(qcfg.mix[0] * n))
-    g2 = int(round(qcfg.mix[1] * n))
-    g4 = min(g4, n)
-    g2 = min(g2, n - g4)
-    return np.array([4] * g4 + [2] * g2 + [1] * (n - g4 - g2), np.int8)
+    """Compat wrapper — prefer ``QuantConfig.group_pbits(k)``."""
+    return qcfg.group_pbits(k)
 
 
 def linear_init(key, k: int, n: int, qcfg: QuantConfig, *,
@@ -62,29 +60,32 @@ def linear_init(key, k: int, n: int, qcfg: QuantConfig, *,
                           ).astype(dtype)}
     if use_bias:
         params["b"] = jnp.zeros((n,), dtype)
-    if not quantized or qcfg.mode == "fp":
+    phase = qcfg.phase
+    if not quantized or phase is Phase.FP:
         return params
-    g = eff_group_size(k, qcfg.group_size)
-    if qcfg.mode == "noise":
-        params["s"] = noise_lib.init_s(num_groups(k, g), qcfg.p_init)
-    elif qcfg.mode == "qat":
-        params["pbits"] = jnp.asarray(init_pbits_from_mix(k, qcfg))
-    elif qcfg.mode == "serve":
+    if phase is Phase.NOISE:
+        params["s"] = noise_lib.init_s(qcfg.num_groups(k), qcfg.p_init)
+    elif phase is Phase.QAT:
+        params["pbits"] = jnp.asarray(qcfg.group_pbits(k))
+    elif phase is Phase.SERVE:
         # Packed-buffer layout per qcfg.mix (zero codes; real deployments
-        # fill these via serve_params_from_qat). Gives eval_shape the exact
-        # serve pytree for the dry-run.
+        # fill these via soniq.to_serve). Materialized from the phase's
+        # param_schema so the dry-run specs and init share one layout,
+        # with the non-zero metadata (identity perm, mix precisions, unit
+        # scales) filled in.
         del params["w"]
-        k4, k2, k1 = qcfg.segments(k) if k >= qcfg.group_size else (k, 0, 0)
-        pbits = init_pbits_from_mix(k, qcfg)
-        params.update({
-            "w4": jnp.zeros((k4 // 2, n), jnp.uint8),
-            "w2": jnp.zeros((k2 // 4, n), jnp.uint8),
-            "w1": jnp.zeros((k1 // 8, n), jnp.uint8),
-            "perm": jnp.arange(k, dtype=jnp.int32),
-            "pbits_sorted": jnp.asarray(pbits),
-            "wscale": None if qcfg.scale_mode == "none"
-                      else jnp.ones((num_groups(k, g),), jnp.float32),
-        })
+        for name, sd in Phase.SERVE.param_schema(k, n, qcfg).items():
+            if name == "b":
+                continue
+            if name == "perm":
+                params[name] = jnp.arange(k, dtype=jnp.int32)
+            elif name == "pbits_sorted":
+                params[name] = jnp.asarray(qcfg.group_pbits(k))
+            elif name == "wscale":
+                params[name] = None if sd is None \
+                    else jnp.ones(sd.shape, sd.dtype)
+            else:
+                params[name] = jnp.zeros(sd.shape, sd.dtype)
     return params
 
 
@@ -126,54 +127,61 @@ def _matmul(x, w, b=None):
 
 def linear_apply(params: Dict, x, qcfg: QuantConfig,
                  rng: Optional[jax.Array] = None):
-    """x: [..., K] -> [..., N]."""
-    b = params.get("b")
-    w = params["w"] if "w" in params else None
-    mode = qcfg.mode
-    if mode != "fp" and w is not None and "s" not in params \
-            and "pbits" not in params:
-        mode = "fp"  # skip layer: holds only a plain weight
-
-    if mode == "fp":
-        return _matmul(x, w, b)
-
-    k = w.shape[0] if w is not None else params["perm"].shape[0]
-    g = eff_group_size(k, qcfg.group_size)
-
-    if mode == "noise":
-        assert rng is not None, "Phase I needs an rng"
-        kw, kx = jax.random.split(rng)
-        # Normalize group abs-max to 1.0 (not grid-max 1.875): the Phase-I
-        # clip +-(2 - sigma) must not bite below sigma ~= 1, else its loss
-        # gradient stalls the precision search at ~sigma 0.27 for every
-        # group (the paper's scale-free setting has weights well inside +-2).
-        sw = _weight_scales(w, qcfg, g) * float(quant._static_grid_max(4))
-        wf = jnp.asarray(w, jnp.float32) / jnp.repeat(
-            sw, g, total_repeat_length=k)[:, None]
-        wn = noise_lib.inject_weight_noise(wf, params["s"], kw, g)
-        wn = (wn * jnp.repeat(sw, g, total_repeat_length=k)[:, None]
-              ).astype(x.dtype)
-        if qcfg.quantize_activations:
-            sx = _act_scale(x, qcfg)
-            x = noise_lib.inject_act_noise(x, params["s"], kx, sx, g)
-        return _matmul(x, wn, b)
-
-    if mode == "qat":
-        pbits = params["pbits"].astype(jnp.float32)
-        if qcfg.prequantized:
-            wq = w.astype(x.dtype)       # already on the grid (hoisted)
-        else:
-            wq = _quantize_weight(w, pbits, qcfg, g).astype(x.dtype)
-        xq = _quantize_act(x, pbits, qcfg, g)
-        return _matmul(xq, wq, b)
-
-    if mode == "serve":
-        return _serve_apply(params, x, qcfg, g)
-
-    raise ValueError(mode)
+    """x: [..., K] -> [..., N]. Dispatches on the lifecycle phase; a leaf
+    holding only a plain weight (skip layer) always runs the FP rule."""
+    phase = qcfg.phase
+    if phase is not Phase.FP and Phase.FP.owns_leaf(params):
+        phase = Phase.FP  # skip layer: holds only a plain weight
+    if phase is Phase.SERVE and "w4" not in params:
+        raise ValueError(
+            "serve-phase linear got an unconverted leaf (keys "
+            f"{sorted(params)}); run soniq.to_serve / convert_tree first")
+    return phase.rule("linear")(params, x, qcfg, rng)
 
 
-def _serve_apply(params: Dict, x, qcfg: QuantConfig, group_size: int):
+@Phase.FP.defrule("linear")
+def _linear_fp(params, x, qcfg, rng):
+    return _matmul(x, params["w"], params.get("b"))
+
+
+@Phase.NOISE.defrule("linear")
+def _linear_noise(params, x, qcfg, rng):
+    assert rng is not None, "Phase I needs an rng"
+    w, b = params["w"], params.get("b")
+    k = w.shape[0]
+    g = qcfg.eff_group_size(k)
+    kw, kx = jax.random.split(rng)
+    # Normalize group abs-max to 1.0 (not grid-max 1.875): the Phase-I
+    # clip +-(2 - sigma) must not bite below sigma ~= 1, else its loss
+    # gradient stalls the precision search at ~sigma 0.27 for every
+    # group (the paper's scale-free setting has weights well inside +-2).
+    sw = _weight_scales(w, qcfg, g) * float(quant._static_grid_max(4))
+    wf = jnp.asarray(w, jnp.float32) / jnp.repeat(
+        sw, g, total_repeat_length=k)[:, None]
+    wn = noise_lib.inject_weight_noise(wf, params["s"], kw, g)
+    wn = (wn * jnp.repeat(sw, g, total_repeat_length=k)[:, None]
+          ).astype(x.dtype)
+    if qcfg.quantize_activations:
+        sx = _act_scale(x, qcfg)
+        x = noise_lib.inject_act_noise(x, params["s"], kx, sx, g)
+    return _matmul(x, wn, b)
+
+
+@Phase.QAT.defrule("linear")
+def _linear_qat(params, x, qcfg, rng):
+    w, b = params["w"], params.get("b")
+    g = qcfg.eff_group_size(w.shape[0])
+    pbits = params["pbits"].astype(jnp.float32)
+    if qcfg.prequantized:
+        wq = w.astype(x.dtype)       # already on the grid (hoisted)
+    else:
+        wq = _quantize_weight(w, pbits, qcfg, g).astype(x.dtype)
+    xq = _quantize_act(x, pbits, qcfg, g)
+    return _matmul(xq, wq, b)
+
+
+@Phase.SERVE.defrule("linear")
+def _linear_serve(params, x, qcfg, rng):
     """Packed-weight inference path (pure-jnp emulation of the Pallas
     kernel's arithmetic: uint8 loads -> shift/mask unpack -> affine dequant
     -> bf16 matmul, fp32 accumulate). ``kernels.ops.packed_matmul`` is the
@@ -183,24 +191,15 @@ def _serve_apply(params: Dict, x, qcfg: QuantConfig, group_size: int):
     k2 = params["w2"].shape[0] * 4
     k1 = params["w1"].shape[0] * 8
     k = k4 + k2 + k1
+    group_size = qcfg.eff_group_size(k)
     x = jnp.take(x, params["perm"], axis=-1)          # channel reordering
     # Dequantize directly in the compute dtype: every SMOL grid value is
     # exactly representable in bf16 (4 mantissa bits suffice), and the fp32
     # intermediate would double the dequant-materialization traffic (§Perf).
     cdt = x.dtype
-    parts = []
-    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
-        if kp == 0:
-            continue
-        u = pack_lib.unpack_codes(params[name], p, kp).astype(cdt)
-        wd_p = (2.0 * u - jnp.asarray(2 ** p - 1, cdt)) \
-            * jnp.asarray(2.0 ** (1 - p), cdt)
-        parts.append(wd_p)
-    wd = jnp.concatenate(parts, axis=0)
-    if params.get("wscale") is not None:
-        s_full = jnp.repeat(params["wscale"].astype(cdt), group_size,
-                            total_repeat_length=k)
-        wd = wd * s_full[:, None]
+    wd = pack_lib.dequant_packed_carriers(
+        {n: params[n] for n in ("w4", "w2", "w1")}, cdt,
+        wscale=params.get("wscale"), group_size=group_size)
     if qcfg.quantize_activations:
         pbits = params["pbits_sorted"].astype(jnp.float32)
         sx = _act_scale(x, qcfg)
@@ -220,7 +219,7 @@ def prequantize_tree(params, qcfg: QuantConfig, compute_dtype=jnp.bfloat16):
             return node
         node = dict(node)
         w, pbits = node["w"], node["pbits"]
-        g = eff_group_size(w.shape[-2], qcfg.group_size)
+        g = qcfg.eff_group_size(w.shape[-2])
 
         def q2d(w2, pb):
             return _quantize_weight(w2, pb.astype(jnp.float32), qcfg, g)
@@ -234,54 +233,23 @@ def prequantize_tree(params, qcfg: QuantConfig, compute_dtype=jnp.bfloat16):
 
 
 def serve_params_from_qat(params: Dict, qcfg: QuantConfig) -> Dict:
-    """Offline deploy conversion: trained (w, pbits) -> channel-reordered
-    packed buffers + metadata. The returned dict is a valid SmolLinear
-    "serve" params pytree."""
-    w = np.asarray(params["w"], np.float32)
-    pbits = np.asarray(params["pbits"])
-    k, n = w.shape
-    g = eff_group_size(k, qcfg.group_size)
-    gperm = patterns_lib.reorder_channels(pbits)
-    perm = patterns_lib.expand_group_perm(gperm, g)
-    w_sorted = w[perm]
-    pbits_sorted = pbits[gperm]
-    if qcfg.scale_mode == "none":
-        scales = None
-    else:
-        scales = np.asarray(quant.per_group_weight_scale(
-            jnp.asarray(w_sorted), g))
-    packed = pack_lib.quantize_pack_weight(jnp.asarray(w_sorted),
-                                           pbits_sorted, scales, g)
-    out = {
-        "w4": packed["w4"], "w2": packed["w2"], "w1": packed["w1"],
-        "perm": jnp.asarray(perm, jnp.int32),
-        "pbits_sorted": jnp.asarray(pbits_sorted),
-        "wscale": None if scales is None else jnp.asarray(scales),
-    }
-    if "b" in params:
-        out["b"] = params["b"]
-    return out
+    """DEPRECATED legacy entry point — use ``soniq.to_serve`` (or the
+    pytree-level ``repro.api.transforms.pack_linear``)."""
+    warnings.warn(
+        "smol.serve_params_from_qat is deprecated; use soniq.to_serve / "
+        "repro.api.transforms.pack_linear instead",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import transforms as _transforms
+    return _transforms.pack_linear(params, qcfg)
 
 
 def serve_param_specs(k: int, n: int, qcfg: QuantConfig, *,
                       use_bias: bool = False, dtype=jnp.float32) -> Dict:
     """ShapeDtypeStruct stand-ins for a serve-mode SmolLinear — used by the
-    multi-pod dry-run (no allocation)."""
-    k4, k2, k1 = qcfg.segments(k) if k >= qcfg.group_size else (k, 0, 0)
-    g = eff_group_size(k, qcfg.group_size)
-    sd = jax.ShapeDtypeStruct
-    out = {
-        "w4": sd((k4 // 2, n), jnp.uint8),
-        "w2": sd((k2 // 4, n), jnp.uint8),
-        "w1": sd((k1 // 8, n), jnp.uint8),
-        "perm": sd((k,), jnp.int32),
-        "pbits_sorted": sd((num_groups(k, g),), jnp.int8),
-        "wscale": None if qcfg.scale_mode == "none"
-                  else sd((num_groups(k, g),), jnp.float32),
-    }
-    if use_bias:
-        out["b"] = sd((n,), dtype)
-    return out
+    multi-pod dry-run (no allocation). Delegates to the SERVE phase's
+    param schema."""
+    return Phase.SERVE.param_schema(k, n, qcfg, use_bias=use_bias,
+                                    dtype=dtype)
 
 
 def bit_penalty_of_params(params) -> jnp.ndarray:
@@ -302,7 +270,7 @@ def project_noise_weights(params, qcfg: QuantConfig):
             node = dict(node)
             w = node["w"]
             k = w.shape[-2]
-            g = eff_group_size(k, qcfg.group_size)
+            g = qcfg.eff_group_size(k)
 
             def proj2d(w2, s1):
                 sw = _weight_scales(w2, qcfg, g)

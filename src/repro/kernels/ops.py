@@ -41,7 +41,8 @@ def packed_segment_matmul(x, wp, scales=None, *, p: int,
 def packed_matmul(x, serve_params: Dict, *, act_quant: bool = True,
                   interpret: Optional[bool] = None, **blocks):
     """Full SmolLinear serve-mode matmul over the [K4|K2|K1] segments of a
-    ``smol.serve_params_from_qat`` pytree. Drop-in for the jnp serve path."""
+    packed serve leaf (``soniq.to_serve`` / ``repro.api.transforms
+    .pack_linear``). Drop-in for the jnp serve path."""
     interpret = default_interpret() if interpret is None else interpret
     x = jnp.take(x, serve_params["perm"], axis=-1)
     lead = x.shape[:-1]

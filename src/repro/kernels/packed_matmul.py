@@ -29,12 +29,11 @@ from repro.core.qtypes import GROUP_SIZE
 def _tpu_compiler_params():
     """K is the innermost (accumulation) grid dim — mark it 'arbitrary' so
     Mosaic may not reorder/parallelize it. Ignored in interpret mode."""
-    try:
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:  # older jax spelling
-        return pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    # The class was renamed TPUCompilerParams -> CompilerParams across jax
+    # releases; accept either spelling.
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
 
 
 def fit_block(total: int, want: int, multiple: int = 1) -> int:

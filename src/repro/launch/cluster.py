@@ -77,6 +77,25 @@ class Coordinator:
         mesh = (cfg.num_hosts * cfg.chips_per_host // cfg.model_parallel,
                 cfg.model_parallel)
         microbatches = 1
+        # Join barrier: don't start failure detection until every host has
+        # heartbeat at least once — spawn startup pays a full interpreter
+        # (+ jax) import, which can exceed the detection threshold on slow
+        # machines and would mark still-booting hosts dead.
+        joined: set = set()
+        join_deadline = time.time() + 120.0
+        while len(joined) < cfg.num_hosts and time.time() < join_deadline:
+            try:
+                host, step, t = beat_q.get(timeout=0.5)
+                hb.beat(host, t)
+                joined.add(host)
+            except queue.Empty:
+                pass
+            # A worker that exited before its first heartbeat (startup
+            # crash) will never join — count it so the detection loop
+            # below can declare it dead instead of stalling here.
+            for h, p in enumerate(procs):
+                if h not in joined and not p.is_alive():
+                    joined.add(h)
         deadline = time.time() + run_for
         remeshed = False
         while time.time() < deadline:

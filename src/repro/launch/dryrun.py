@@ -131,7 +131,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
     rules = None
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         if info["kind"] == "train":
             tcfg = specs_lib.train_config_for(arch, mesh)
             if hoist:

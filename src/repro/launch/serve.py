@@ -11,15 +11,14 @@ dry-run cells lower exactly this step at production scale).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import numpy as np
 
+from repro import soniq
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve import engine
 from repro.train import checkpoint as ckpt_lib
 
 
@@ -38,19 +37,18 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
-        cfg.quant, mode="qat"))
+    cfg = soniq.with_phase(cfg, soniq.Phase.QAT)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         state, step = ckpt_lib.restore(args.ckpt, {"params": params})
         params = state["params"]
         print(f"loaded checkpoint step {step}")
 
-    eng = engine.DecodeEngine(
+    eng = soniq.DecodeEngine(
         jax.device_get(params), cfg,
-        engine.EngineConfig(cache_len=args.cache_len,
-                            temperature=args.temperature))
-    print(f"packed model: {engine.packed_model_bytes(eng.params):,} bytes")
+        soniq.EngineConfig(cache_len=args.cache_len,
+                           temperature=args.temperature))
+    print(f"packed model: {soniq.packed_bytes(eng.params):,} bytes")
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,

@@ -9,7 +9,6 @@ for SWA archs, O(1) state for SSM).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -17,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.phases import Phase
 from repro.models import lm
 from repro.optim import adamw
 from repro.train import state as state_lib
@@ -58,13 +58,11 @@ def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
 
 
 def serve_quant(cfg):
-    return dataclasses.replace(
-        cfg, quant=dataclasses.replace(cfg.quant, mode="serve"))
+    return cfg.with_quant_mode(Phase.SERVE)
 
 
 def qat_quant(cfg):
-    return dataclasses.replace(
-        cfg, quant=dataclasses.replace(cfg.quant, mode="qat"))
+    return cfg.with_quant_mode(Phase.QAT)
 
 
 def batch_specs(arch: str, shape: str) -> Dict[str, SD]:

@@ -12,14 +12,13 @@ degenerates gracefully to whatever devices exist. The dry-run
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import soniq
 from repro.configs import get_config
-from repro.core.qtypes import QuantConfig
 from repro.data import synthetic
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as sh
@@ -56,8 +55,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
-        cfg.quant, mode="qat"))
+    cfg = soniq.with_phase(cfg, soniq.Phase.QAT)
     mesh = parse_mesh(args.mesh)
     rules = sh.activation_rules(cfg, mesh, batch=args.batch)
     tcfg = state_lib.TrainConfig(
@@ -70,7 +68,7 @@ def main():
         vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
         seed=0), host_id=jax.process_index())
 
-    with jax.set_mesh(mesh), shard_ctx.sharding_rules(rules):
+    with mesh_lib.set_mesh(mesh), shard_ctx.sharding_rules(rules):
         key = jax.random.PRNGKey(0)
         state = state_lib.init_state(key, cfg, tcfg)
         state_specs = jax.eval_shape(

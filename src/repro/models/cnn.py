@@ -16,7 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import noise as noise_lib
+from repro.core import pack as pack_lib
 from repro.core import quant, smol
+from repro.core.phases import Phase
 from repro.core.qtypes import QuantConfig
 
 
@@ -30,20 +32,18 @@ class CNNConfig:
         default_factory=lambda: QuantConfig(mode="qat"))
 
 
-def _g(cin: int, qcfg: QuantConfig) -> int:
-    return smol.eff_group_size(cin, qcfg.group_size)
-
-
 def conv_init(key, kh, kw, cin, cout, qcfg: QuantConfig, *,
               quantized=True) -> Dict:
+    """Serve-phase conv params come from ``soniq.to_serve`` on a trained
+    QAT tree (``repro.api.transforms.pack_conv``), not from init."""
     w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) \
         * (1.0 / np.sqrt(kh * kw * cin))
     p = {"w": w}
-    if quantized and qcfg.mode == "noise":
-        p["s"] = noise_lib.init_s(smol.num_groups(cin, _g(cin, qcfg)),
-                                  qcfg.p_init)
-    elif quantized and qcfg.mode == "qat":
-        p["pbits"] = jnp.asarray(smol.init_pbits_from_mix(cin, qcfg))
+    phase = qcfg.phase
+    if quantized and phase is Phase.NOISE:
+        p["s"] = noise_lib.init_s(qcfg.num_groups(cin), qcfg.p_init)
+    elif quantized and phase is Phase.QAT:
+        p["pbits"] = jnp.asarray(qcfg.group_pbits(cin))
     return p
 
 
@@ -62,15 +62,53 @@ def _quant_w_conv(w, pbits, qcfg, g):
     return jnp.moveaxis(wq, -1, 2)
 
 
+def _serve_conv_weight(params: Dict, qcfg: QuantConfig, cdt):
+    """Packed conv buffers ([rows, kh, kw, Cout], see api.transforms
+    pack_conv) -> dequantized HWIO kernel in the compute dtype."""
+    trailing = params["w4"].shape[1:]           # (kh, kw, Cout)
+    cin = (params["w4"].shape[0] * 2 + params["w2"].shape[0] * 4
+           + params["w1"].shape[0] * 8)
+    wd = pack_lib.dequant_packed_carriers(
+        {n: params[n].reshape(params[n].shape[0],      # explicit trailing
+             int(np.prod(params[n].shape[1:])))        # size: rows may be 0
+         for n in ("w4", "w2", "w1")}, cdt,
+        wscale=params.get("wscale"),
+        group_size=qcfg.eff_group_size(cin))    # [Cin, kh*kw*Cout]
+    return jnp.moveaxis(wd.reshape((cin,) + trailing), 0, 2)
+
+
 def conv_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
                stride=1, groups=1):
     """x [B,H,W,Cin] -> [B,H',W',Cout]; SONIQ along Cin."""
+    phase = qcfg.phase
+    if "w4" in params:                          # packed deployment leaf
+        assert groups == 1, "packed convs are pointwise/full only"
+        cdt = x.dtype
+        w = _serve_conv_weight(params, qcfg, cdt)
+        cin = w.shape[2]
+        x = jnp.take(x, params["perm"], axis=-1)   # channel reordering
+        if qcfg.quantize_activations:
+            sx = quant.abs_max_scale(x) if qcfg.act_scale_mode != "none" \
+                else 1.0
+            x = quant.fake_quant(x, params["pbits_sorted"].astype(
+                jnp.float32), sx, qcfg.eff_group_size(cin))
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=1,
+            preferred_element_type=jnp.float32)
+
+    if Phase.FP.owns_leaf(params):
+        phase = Phase.FP                        # unquantized / skip conv
+    elif phase is Phase.SERVE:
+        raise ValueError(
+            "serve-phase conv got an unconverted leaf (keys "
+            f"{sorted(params)}); run soniq.to_serve / convert_tree first")
     w = params["w"]
     cin = w.shape[2] * groups
-    g = _g(w.shape[2], qcfg)
-    mode = qcfg.mode if ("s" in params or "pbits" in params) else "fp"
+    g = qcfg.eff_group_size(w.shape[2])
 
-    if mode == "noise":
+    if phase is Phase.NOISE:
         k1, k2 = jax.random.split(rng)
         wf = jnp.moveaxis(w, 2, 0).reshape(w.shape[2], -1)
         # abs-max -> 1.0 normalization: keeps the +-(2 - sigma) clip from
@@ -86,7 +124,7 @@ def conv_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
             sx = quant.abs_max_scale(x) if qcfg.act_scale_mode != "none" \
                 else 1.0
             x = noise_lib.inject_act_noise(x, params["s"], k2, sx, g)
-    elif mode == "qat":
+    elif phase is Phase.QAT:
         pbits = params["pbits"].astype(jnp.float32)
         w = _quant_w_conv(w, pbits, qcfg, g)
         if qcfg.quantize_activations and groups == 1:
@@ -156,7 +194,7 @@ def xent_loss(params, batch, cfg: CNNConfig, rng=None):
     logz = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     loss = jnp.mean(logz - ll)
-    if cfg.quant.mode == "noise":
+    if cfg.quant.phase is Phase.NOISE:
         loss = loss + cfg.quant.lam * smol.bit_penalty_of_params(params)
     return loss, logits
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import smol
+from repro.core.phases import Phase
 from repro.core.qtypes import QuantConfig
 from . import blocks
 from .common import (embed_init, embed_logits, embed_lookup, layer_norm,
@@ -77,7 +78,7 @@ def _remat(cfg, fn):
 def _run_group(gparams, kind: str, x, positions, cfg, qcfg, rng,
                cross_x=None):
     """lax.scan over the stacked layers of one plan group."""
-    use_rng = qcfg.mode == "noise"
+    use_rng = qcfg.phase.needs_rng
 
     def blk(lp, x_, key):
         return blocks.block_apply(lp, kind, x_, positions, cfg, qcfg,
@@ -198,7 +199,7 @@ def loss_fn(params, batch: Dict, cfg, rng):
         rng=rng)
     loss = lm_loss(params, cfg, hidden, batch["labels"])
     loss = loss + MOE_AUX * aux
-    if cfg.quant.mode == "noise":
+    if cfg.quant.phase is Phase.NOISE:
         loss = loss + cfg.quant.lam * smol.bit_penalty_of_params(params)
     return loss, {"ce": loss, "moe_aux": aux}
 

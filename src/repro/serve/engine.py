@@ -1,79 +1,51 @@
 """Batched decode engine over packed SONIQ weights.
 
-``serve_convert`` walks a trained QAT parameter tree and packs every
-quantized linear: per-layer precisions are re-budgeted to the static
-segment mix (scan groups must share packed shapes — groups that trained
-4-bit keep their 4 bits while the budget allows, ranked by trained
-precision then weight magnitude), channels reordered (paper Obs. 4), codes
-bit-packed. The engine then runs greedy/temperature decoding with the ring
-KV cache; weights move as 1/2/4-bit carriers — the paper's deployment path.
+The engine consumes the output of ``soniq.to_serve`` (or converts a trained
+QAT tree itself via ``repro.api.transforms.convert_tree``): per-layer
+precisions re-budgeted to the static segment mix (scan groups must share
+packed shapes — groups that trained 4-bit keep their 4 bits while the
+budget allows, ranked by trained precision then weight magnitude), channels
+reordered (paper Obs. 4), codes bit-packed. It then runs greedy/temperature
+decoding with the ring KV cache; weights move as 1/2/4-bit carriers — the
+paper's deployment path.
+
+``rebudget_pbits`` / ``serve_convert`` are deprecation shims kept for
+external callers; the implementations moved to ``repro.api.transforms``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import smol
+from repro.api import transforms as lifecycle
+from repro.core.phases import Phase
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
 
 
 def rebudget_pbits(pbits: np.ndarray, w: np.ndarray,
                    qcfg: QuantConfig) -> np.ndarray:
-    """Project trained per-group precisions onto the static segment budget
-    (counts from qcfg.mix) preserving the trained ranking; ties broken by
-    group abs-max (importance proxy)."""
-    n = pbits.shape[0]
-    k = w.shape[0]
-    g = k // n
-    counts = smol.init_pbits_from_mix(k, qcfg)
-    n4 = int((counts == 4).sum())
-    n2 = int((counts == 2).sum())
-    mag = np.abs(w).reshape(n, g, -1).max(axis=(1, 2))
-    order = np.lexsort((-mag, -pbits.astype(np.int64)))  # pbits desc, mag desc
-    out = np.empty(n, np.int8)
-    out[order[:n4]] = 4
-    out[order[n4:n4 + n2]] = 2
-    out[order[n4 + n2:]] = 1
-    return out
-
-
-def _convert_leaf_layer(w: np.ndarray, pbits: np.ndarray, b,
-                        qcfg: QuantConfig) -> Dict:
-    params = {"w": jnp.asarray(w), "pbits": jnp.asarray(
-        rebudget_pbits(np.asarray(pbits), w, qcfg))}
-    if b is not None:
-        params["b"] = jnp.asarray(b)
-    return smol.serve_params_from_qat(params, qcfg)
+    """DEPRECATED — moved to ``repro.api.transforms.rebudget_pbits``."""
+    warnings.warn(
+        "engine.rebudget_pbits is deprecated; use "
+        "repro.api.transforms.rebudget_pbits (soniq.rebudget_pbits)",
+        DeprecationWarning, stacklevel=2)
+    return lifecycle.rebudget_pbits(pbits, w, qcfg)
 
 
 def serve_convert(params, qcfg: QuantConfig):
-    """QAT pytree -> serve pytree (handles stacked scan/expert dims)."""
-    def fix(node):
-        if not (isinstance(node, dict) and "w" in node and "pbits" in node):
-            return node
-        w = np.asarray(node["w"])
-        pb = np.asarray(node["pbits"])
-        b = np.asarray(node["b"]) if "b" in node else None
-        if w.ndim == 2:
-            return _convert_leaf_layer(w, pb, b, qcfg)
-        lead = w.shape[:-2]
-        flat_w = w.reshape((-1,) + w.shape[-2:])
-        flat_pb = pb.reshape((-1, pb.shape[-1]))
-        flat_b = b.reshape((-1, b.shape[-1])) if b is not None else None
-        converted = [
-            _convert_leaf_layer(flat_w[i], flat_pb[i],
-                                None if flat_b is None else flat_b[i], qcfg)
-            for i in range(flat_w.shape[0])]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs).reshape(
-            lead + xs[0].shape), *converted)
-        return stacked
-
-    return smol._tree_map_dicts(fix, params)
+    """DEPRECATED — use ``soniq.to_serve`` (or the pytree-level
+    ``repro.api.transforms.convert_tree``)."""
+    warnings.warn(
+        "engine.serve_convert is deprecated; use soniq.to_serve / "
+        "repro.api.transforms.convert_tree",
+        DeprecationWarning, stacklevel=2)
+    return lifecycle.convert_tree(params, qcfg, rebudget=True)
 
 
 @dataclasses.dataclass
@@ -89,12 +61,10 @@ class DecodeEngine:
 
     def __init__(self, params, arch_cfg, ecfg: EngineConfig,
                  *, already_serve: bool = False):
-        self.cfg = dataclasses.replace(
-            arch_cfg, quant=dataclasses.replace(arch_cfg.quant,
-                                                mode="serve"))
+        self.cfg = arch_cfg.with_quant_mode(Phase.SERVE)
         self.ecfg = ecfg
-        self.params = params if already_serve else serve_convert(
-            params, self.cfg.quant)
+        self.params = params if already_serve else lifecycle.convert_tree(
+            params, self.cfg.quant, rebudget=True)
         self._step = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, self.cfg, c, t, pos))
 

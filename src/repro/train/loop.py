@@ -8,14 +8,14 @@ tests/test_fault_tolerance.py through SIGKILL).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
 
-from repro.core import schedule as schedule_lib
+from repro.api import transforms as soniq
+from repro.core.phases import Phase
 from repro.optim import adamw
 from . import checkpoint as ckpt_lib
 from . import state as state_lib
@@ -29,10 +29,8 @@ def train(arch_cfg, tcfg: state_lib.TrainConfig,
     Returns {"state", "history", "pattern_report"}."""
     hooks = hooks or []
     key = jax.random.PRNGKey(tcfg.seed)
-    noise_cfg = dataclasses.replace(
-        arch_cfg, quant=dataclasses.replace(arch_cfg.quant, mode="noise"))
-    qat_cfg = dataclasses.replace(
-        arch_cfg, quant=dataclasses.replace(arch_cfg.quant, mode="qat"))
+    noise_cfg = arch_cfg.with_quant_mode(Phase.NOISE)
+    qat_cfg = arch_cfg.with_quant_mode(Phase.QAT)
 
     start_step = 0
     pattern_report = None
@@ -65,7 +63,7 @@ def train(arch_cfg, tcfg: state_lib.TrainConfig,
     while step < tcfg.t2:
         if step == tcfg.t1 and in_phase1:
             # ---- Phase I -> Phase II boundary (host-side) ----
-            params, pattern_report = schedule_lib.pattern_match_params(
+            params, pattern_report = soniq.freeze_qat(
                 jax.device_get(state["params"]), arch_cfg.quant)
             state["params"] = params
             state["opt"] = adamw.init_state(params)   # fresh moments

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import smol
+from repro.core.phases import Phase
 from repro.models import lm
 from repro.optim import adamw, grad_compress, schedules
 
@@ -68,7 +69,7 @@ def train_step(state: Dict, batch: Dict, arch_cfg, tcfg: TrainConfig,
     params = state["params"]
     n_mb = tcfg.num_microbatches
 
-    hoist = tcfg.hoist_weight_quant and arch_cfg.quant.mode == "qat"
+    hoist = tcfg.hoist_weight_quant and arch_cfg.quant.phase is Phase.QAT
     if hoist:
         import dataclasses as _dc
         from repro.core import smol as _smol
@@ -138,7 +139,7 @@ def train_step(state: Dict, batch: Dict, arch_cfg, tcfg: TrainConfig,
     new_params, new_opt, om = adamw.apply_updates(
         params, grads, state["opt"], tcfg.adamw, lr_scale=lr_scale)
 
-    if arch_cfg.quant.mode == "noise":
+    if arch_cfg.quant.phase is Phase.NOISE:
         # Paper Alg. 1 line 7: project weights into +-(2 - sigma(s)).
         new_params = smol.project_noise_weights(new_params, arch_cfg.quant)
 

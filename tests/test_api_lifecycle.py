@@ -1,0 +1,202 @@
+"""The ``soniq`` façade: typed phases, lifecycle round-trips, serve parity,
+and the legacy-entry-point deprecation shims."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import soniq
+from repro.configs.base import ArchConfig
+from repro.models import cnn, lm
+
+
+def _tiny_lm(mode="qat"):
+    return ArchConfig(
+        name="t", family="dense", num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=32,
+        dtype="float32", param_dtype="float32", q_block=32,
+        quant=soniq.QuantConfig(mode=mode))
+
+
+# ------------------------------------------------------------- phases ----
+def test_phase_objects_replace_mode_strings():
+    assert soniq.Phase.from_mode("qat") is soniq.Phase.QAT
+    assert soniq.Phase.from_mode(soniq.Phase.SERVE) is soniq.Phase.SERVE
+    with pytest.raises(ValueError):
+        soniq.Phase.from_mode("int3")
+    # QuantConfig accepts phase objects and round-trips them.
+    qc = soniq.QuantConfig(mode=soniq.Phase.NOISE)
+    assert qc.mode == "noise" and qc.phase is soniq.Phase.NOISE
+    assert qc.with_mode(soniq.Phase.QAT).phase is soniq.Phase.QAT
+    # lifecycle ordering
+    assert soniq.Phase.FP.next is soniq.Phase.NOISE
+    assert soniq.Phase.QAT.next is soniq.Phase.SERVE
+    assert soniq.Phase.SERVE.next is None
+    assert soniq.Phase.NOISE.needs_rng and not soniq.Phase.QAT.needs_rng
+    assert not soniq.Phase.SERVE.trainable
+
+
+@pytest.mark.parametrize("phase", ["noise", "qat", "serve"])
+def test_param_schema_matches_init(phase):
+    """Each phase's param_schema must describe exactly what linear_init
+    builds for that phase."""
+    from repro.core import smol
+    qc = soniq.QuantConfig(mode=phase)
+    k, n = 128, 32
+    params = smol.linear_init(jax.random.PRNGKey(0), k, n, qc)
+    schema = soniq.Phase.from_mode(phase).param_schema(k, n, qc)
+    assert set(schema) == set(params)
+    for name, sd in schema.items():
+        if sd is None:
+            assert params[name] is None
+        else:
+            assert params[name].shape == sd.shape, name
+            assert params[name].dtype == sd.dtype, name
+
+
+def test_segments_handles_k_below_group_size():
+    qc = soniq.QuantConfig(mode="qat")
+    k4, k2, k1 = qc.segments(8)
+    assert (k4 + k2 + k1) == 8
+    assert qc.num_groups(8) == 1 and qc.eff_group_size(8) == 8
+    # one source of truth: the single group's precision matches the segments
+    (pb,) = qc.group_pbits(8).tolist()
+    assert {4: k4, 2: k2, 1: k1}[pb] == 8
+    # multiples of group_size keep the historical behaviour
+    assert qc.segments(128) == (64, 48, 16)
+
+
+# ------------------------------------------------- linear round-trip ----
+def test_linear_noise_to_qat_to_serve_roundtrip():
+    qc = soniq.QuantConfig(mode=soniq.Phase.NOISE)
+    k, n = 128, 16
+    state = soniq.init_linear(jax.random.PRNGKey(0), k, n, qc)
+    assert state.phase is soniq.Phase.NOISE
+    assert state.params["s"].shape == (qc.num_groups(k),)
+
+    qat, report = soniq.to_qat(state)
+    assert qat.phase is soniq.Phase.QAT
+    # shapes preserved across the boundary
+    assert qat.params["w"].shape == state.params["w"].shape
+    assert qat.params["pbits"].shape == (qc.num_groups(k),)
+    assert report["layers"], "pattern report must cover the layer"
+
+    served = soniq.to_serve(qat)
+    assert served.phase is soniq.Phase.SERVE
+    schema = soniq.Phase.SERVE.param_schema(k, n, qat.qcfg)
+    # packed buffers must be uint8 and cover all k channels
+    total_k = (served.params["w4"].shape[0] * 2
+               + served.params["w2"].shape[0] * 4
+               + served.params["w1"].shape[0] * 8)
+    assert total_k == k
+    assert set(schema) == set(served.params)
+
+    # wrong-phase transitions are rejected
+    with pytest.raises(ValueError):
+        soniq.to_qat(qat)
+    with pytest.raises(ValueError):
+        soniq.to_serve(served)
+
+
+def test_linear_serve_matches_qat_forward():
+    """to_serve output must match the QAT fake-quant forward exactly on the
+    grid (same weights, same activation quantization)."""
+    qc = soniq.QuantConfig(mode=soniq.Phase.QAT)
+    state = soniq.init_linear(jax.random.PRNGKey(1), 256, 32, qc)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 256))
+    y_qat = soniq.apply(state, x)
+    y_srv = soniq.apply(soniq.to_serve(state), x)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_srv),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------- LM round-trip ----
+def test_lm_serve_matches_qat_forward():
+    cfg = _tiny_lm("qat")
+    state = soniq.init(cfg, rng=jax.random.PRNGKey(0))
+    tokens = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    lg_qat = soniq.apply(state, tokens)
+    served = soniq.to_serve(state)   # stacked leaves -> rebudget (identity
+    lg_srv = soniq.apply(served, tokens)  # for the mix-derived init pbits)
+    assert lg_qat.shape == (2, 4, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(lg_qat), np.asarray(lg_srv),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_lm_noise_to_qat_preserves_shapes():
+    cfg = _tiny_lm("noise")
+    state = soniq.init(cfg, rng=jax.random.PRNGKey(0))
+    qat, _ = soniq.to_qat(state)
+    shapes = jax.tree.map(lambda a: str(a.shape), state.params)
+    qshapes = jax.tree.map(lambda a: str(a.shape), qat.params)
+    flat = dict(jax.tree_util.tree_flatten_with_path(shapes)[0])
+    qflat = dict(jax.tree_util.tree_flatten_with_path(qshapes)[0])
+    for path, shape in flat.items():
+        last = str(getattr(path[-1], "key", ""))
+        if last == "s":
+            continue                 # replaced by pbits at the boundary
+        assert qflat[path] == shape, path
+    # every s leaf became a pbits leaf of the same shape
+    for path, shape in flat.items():
+        if str(getattr(path[-1], "key", "")) == "s":
+            twin = path[:-1] + (jax.tree_util.DictKey("pbits"),)
+            assert qflat[twin] == shape
+
+
+# ---------------------------------------------------- CNN round-trip ----
+def test_cnn_serve_matches_qat_forward():
+    qc = soniq.QuantConfig(mode=soniq.Phase.QAT)
+    ccfg = cnn.CNNConfig(quant=qc, channels=(32, 32), blocks_per_stage=1)
+    state = soniq.init(ccfg, rng=jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 8, 3))
+    y_qat = soniq.apply(state, x)
+    served = soniq.to_serve(state)
+    y_srv = soniq.apply(served, x)
+    np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_srv),
+                               atol=1e-4, rtol=1e-3)
+
+
+# --------------------------------------------------- legacy shims ----
+def test_legacy_entry_points_warn_and_delegate():
+    from repro.core import smol
+    from repro.serve import engine
+
+    qc = soniq.QuantConfig(mode="qat")
+    k, n = 64, 8
+    w = np.random.default_rng(0).normal(0, 0.3, (k, n)).astype(np.float32)
+    pbits = qc.group_pbits(k)
+    leaf = {"w": jnp.asarray(w), "pbits": jnp.asarray(pbits)}
+
+    with pytest.warns(DeprecationWarning):
+        legacy = smol.serve_params_from_qat(leaf, qc)
+    new = soniq.pack_linear(leaf, qc)
+    for key in ("w4", "w2", "w1", "perm", "pbits_sorted"):
+        np.testing.assert_array_equal(np.asarray(legacy[key]),
+                                      np.asarray(new[key]))
+
+    with pytest.warns(DeprecationWarning):
+        rb = engine.rebudget_pbits(pbits, w, qc)
+    np.testing.assert_array_equal(rb, soniq.rebudget_pbits(pbits, w, qc))
+
+    tree = {"layer": leaf}
+    with pytest.warns(DeprecationWarning):
+        legacy_tree = engine.serve_convert(tree, qc)
+    new_tree = soniq.convert_tree(tree, qc, rebudget=True)
+    np.testing.assert_array_equal(np.asarray(legacy_tree["layer"]["w4"]),
+                                  np.asarray(new_tree["layer"]["w4"]))
+
+
+def test_state_is_a_pytree_through_jit():
+    qc = soniq.QuantConfig(mode="qat")
+    state = soniq.init_linear(jax.random.PRNGKey(0), 64, 8, qc)
+    x = jnp.ones((2, 64))
+
+    @jax.jit
+    def f(s, x):
+        return soniq.apply(s, x)
+
+    np.testing.assert_allclose(np.asarray(f(state, x)),
+                               np.asarray(soniq.apply(state, x)),
+                               rtol=1e-6, atol=1e-6)

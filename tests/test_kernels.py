@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import transforms
 from repro.core import pack as pack_lib
 from repro.core import quant, smol
 from repro.core.qtypes import QuantConfig
@@ -67,7 +68,7 @@ def test_packed_matmul_mixed_vs_serve_linear():
     params = smol.linear_init(key, 256, 128, qcfg)
     params["pbits"] = jnp.asarray(
         np.array([4, 1, 2, 4, 2, 1, 4, 4, 1, 2, 4, 2, 1, 4, 4, 2], np.int8))
-    sp = smol.serve_params_from_qat(params, qcfg)
+    sp = transforms.pack_linear(params, qcfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 256))
     qserve = QuantConfig(mode="serve", mix=qcfg.mix)
     y_jnp = smol.linear_apply(sp, x, qserve)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import noise, patterns, quant, schedule, smol
 from repro.core.qtypes import QuantConfig
@@ -195,7 +198,8 @@ def test_serve_matches_qat():
     x = jax.random.normal(jax.random.PRNGKey(2), (4, 128))
     y_qat = smol.linear_apply(p, x, qcfg)
 
-    sp = smol.serve_params_from_qat(p, qcfg)
+    from repro.api import transforms
+    sp = transforms.pack_linear(p, qcfg)
     qserve = QuantConfig(mode="serve", mix=qcfg.mix)
     y_srv = smol.linear_apply(sp, x, qserve)
     np.testing.assert_allclose(np.asarray(y_qat), np.asarray(y_srv),

@@ -10,7 +10,8 @@ import traceback
 
 def main() -> None:
     from . import (fig7_accuracy_bpp, fig9_layer_bpp, roofline,
-                   runtime_proxy, table1_smol_variants, table2_patterns)
+                   runtime_proxy, serve_throughput, table1_smol_variants,
+                   table2_patterns)
     benches = [
         ("table2_patterns", table2_patterns.main),
         ("runtime_proxy", runtime_proxy.main),
@@ -18,6 +19,9 @@ def main() -> None:
         ("fig7_accuracy_bpp", fig7_accuracy_bpp.main),
         ("fig9_layer_bpp", fig9_layer_bpp.main),
         ("roofline", roofline.main),
+        # explicit empty argv: the harness's own sys.argv must not leak
+        # into the benchmark's argparse
+        ("serve_throughput", lambda: serve_throughput.main([])),
     ]
     failures = 0
     for name, fn in benches:

@@ -1,10 +1,12 @@
-"""Serve a SONIQ-quantized LM with batched requests.
+"""Serve a SONIQ-quantized LM through the continuous-batching engine.
 
     PYTHONPATH=src python examples/serve_quantized.py
 
 Trains a tiny LM briefly (QAT), converts to packed 1/2/4-bit weights, then
-serves a batch of prompts through the DecodeEngine; reports the packed-size
-win and tokens generated.
+streams a mixed-length request set through the request-level
+``DecodeEngine`` (admission queue, slot reuse, chunked prefill —
+DESIGN.md §10); reports the packed-size win and per-request completions as
+they finish.
 """
 import sys
 
@@ -33,20 +35,26 @@ def main():
     result = loop.train(cfg, tcfg, stream.batches())
     params = jax.device_get(result["state"]["params"])
 
+    # 2 slots serving 4 requests: the engine reuses slots as requests
+    # finish instead of padding everyone to the longest prompt.
     eng = soniq.DecodeEngine(
-        params, cfg, soniq.EngineConfig(cache_len=128, temperature=0.0))
+        params, cfg, soniq.EngineConfig(max_batch=2, cache_len=128,
+                                        prefill_chunk=4))
     fp_bytes = sum(v.size * 4 for v in jax.tree.leaves(params)
                    if hasattr(v, "size"))
     q_bytes = soniq.packed_bytes(eng.params)
     print(f"model bytes: fp32 {fp_bytes:,} -> packed {q_bytes:,} "
           f"({fp_bytes/q_bytes:.1f}x smaller)")
 
-    prompts = np.asarray([[1, 7, 3, 1], [2, 9, 9, 4],
-                          [5, 5, 5, 5], [11, 3, 7, 2]], np.int32)
-    out = eng.generate(prompts, max_new_tokens=12)
-    for i, row in enumerate(out):
-        print(f"request {i}: prompt={row[:4].tolist()} "
-              f"-> {row[4:].tolist()}")
+    prompts = [[1, 7, 3, 1], [2, 9, 9, 4, 30, 12], [5, 5, 5],
+               [11, 3, 7, 2, 8]]
+    requests = [soniq.Request(prompt=np.asarray(p, np.int32),
+                              max_new_tokens=6 + 3 * i, seed=i)
+                for i, p in enumerate(prompts)]
+    for c in eng.serve(requests):
+        print(f"request {c.request_id} [{c.finish_reason}, "
+              f"{c.steps} steps in slot]: prompt={c.request.prompt.tolist()} "
+              f"-> {c.new_tokens.tolist()}")
 
 
 if __name__ == "__main__":

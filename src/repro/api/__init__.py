@@ -41,11 +41,16 @@ __all__ = [
     # losses / reports
     "bit_penalty", "bit_penalty_of_params", "average_bpp",
     # serving (lazy — see __getattr__)
-    "DecodeEngine", "EngineConfig", "packed_bytes", "transforms",
+    "DecodeEngine", "LockstepEngine", "EngineConfig", "Request",
+    "Completion", "Scheduler", "packed_bytes", "transforms",
 ]
 
 _SERVE_EXPORTS = {"DecodeEngine": "DecodeEngine",
+                  "LockstepEngine": "LockstepEngine",
                   "EngineConfig": "EngineConfig",
+                  "Request": "Request",
+                  "Completion": "Completion",
+                  "Scheduler": "Scheduler",
                   "packed_bytes": "packed_model_bytes"}
 
 
@@ -53,6 +58,8 @@ def __getattr__(name):
     # The decode engine imports this package for the lifecycle transforms;
     # re-export it lazily to keep the dependency one-way at import time.
     if name in _SERVE_EXPORTS:
-        from repro.serve import engine
-        return getattr(engine, _SERVE_EXPORTS[name])
+        from repro.serve import engine, scheduler
+        mod = scheduler if hasattr(scheduler, _SERVE_EXPORTS[name]) \
+            else engine
+        return getattr(mod, _SERVE_EXPORTS[name])
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

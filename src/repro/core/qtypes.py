@@ -49,8 +49,12 @@ class QuantConfig:
     # Quantize activations entering each quantized matmul to the same
     # per-group precision (paper Obs. 3 "input-weight consistency").
     quantize_activations: bool = True
-    # Dynamic abs-max scaling of activations (per tensor). Paper-faithful
-    # mode ("none") assumes pre-scaled activations in ±2.
+    # Dynamic abs-max scaling of activations. "per_tensor" reduces over the
+    # whole tensor (training default); "per_token" reduces over the last dim
+    # only — row-independent, which the continuous-batching serve engines
+    # require (a request's tokens must not depend on batch composition —
+    # DESIGN.md §10). Paper-faithful mode ("none") assumes pre-scaled
+    # activations in ±2.
     act_scale_mode: str = "per_tensor"
 
     # Phase-I hyperparameters.
@@ -76,7 +80,8 @@ class QuantConfig:
             object.__setattr__(self, "mode", self.mode.name)
         assert self.mode in ("fp", "noise", "qat", "serve"), self.mode
         assert self.scale_mode in ("none", "per_group"), self.scale_mode
-        assert self.act_scale_mode in ("none", "per_tensor"), self.act_scale_mode
+        assert self.act_scale_mode in ("none", "per_tensor", "per_token"), \
+            self.act_scale_mode
         assert abs(sum(self.mix) - 1.0) < 1e-6, self.mix
         assert self.group_size % 2 == 0
 

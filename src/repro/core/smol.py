@@ -98,6 +98,8 @@ def _weight_scales(w, qcfg: QuantConfig, group_size: int):
 def _act_scale(x, qcfg: QuantConfig):
     if qcfg.act_scale_mode == "none":
         return jnp.asarray(1.0, jnp.float32)
+    if qcfg.act_scale_mode == "per_token":
+        return quant.abs_max_scale(x, axis=-1).astype(jnp.float32)
     return quant.abs_max_scale(x).astype(jnp.float32)
 
 

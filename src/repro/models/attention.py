@@ -193,13 +193,21 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
     per-layer cache slice (67 MB/layer for the 32k cells — the dominant
     decode write traffic, §Perf C3).
 
+    Positions < 0 are per-slot masks (continuous batching, DESIGN.md §10):
+    an ``x`` row/lane whose position is negative is an idle batch slot or a
+    prefill-chunk padding lane — its ring write is redirected out of bounds
+    and dropped, so it cannot clobber a live cache entry, and the causal
+    mask (``q_pos >= k_pos``) already ignores its scores. ``x`` may carry
+    S > 1 tokens per row (chunked prefill): all S tokens are scattered into
+    the ring, then attended with the causal-by-position mask.
+
     cross_kv: optional precomputed (k, v, k_pos) for encoder-decoder cross
     attention (whisper) — used as-is, no cache update.
     """
     b = x.shape[0]
     q, k_new, v_new = _proj_qkv(params, x, x, num_heads, num_kv_heads,
                                 head_dim, qcfg, None)
-    posb = pos[:, None] if pos.ndim == 1 else pos            # [B,1]
+    posb = pos[:, None] if pos.ndim == 1 else pos            # [B,S]
     if mrope_sections is not None:
         pos_r = jnp.broadcast_to(posb[None], (3,) + posb.shape)
     else:
@@ -211,23 +219,26 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
             k_new = apply_rope(k_new, pos_r, rope_theta, mrope_sections)
         stacked = layer_idx is not None
         cache_len = cache["k"].shape[2 if stacked else 1]
-        slot = (posb % cache_len).astype(jnp.int32)           # [B,1]
+        # Masked lanes (pos < 0) scatter out of bounds -> dropped.
+        slot = jnp.where(posb >= 0, posb % cache_len, cache_len)
+        slot = slot.astype(jnp.int32)                         # [B,S]
         bidx = jnp.arange(b)[:, None]
         kd, vd = cache["k"].dtype, cache["v"].dtype
         if stacked:
             k_st = cache["k"].at[layer_idx, bidx, slot].set(
-                k_new.astype(kd))
+                k_new.astype(kd), mode="drop")
             v_st = cache["v"].at[layer_idx, bidx, slot].set(
-                v_new.astype(vd))
-            kpos_st = cache["pos"].at[layer_idx, bidx, slot].set(posb)
+                v_new.astype(vd), mode="drop")
+            kpos_st = cache["pos"].at[layer_idx, bidx, slot].set(
+                posb, mode="drop")
             new_cache = {"k": k_st, "v": v_st, "pos": kpos_st}
             kk = jax.lax.dynamic_index_in_dim(k_st, layer_idx, 0, False)
             vv = jax.lax.dynamic_index_in_dim(v_st, layer_idx, 0, False)
             kp = jax.lax.dynamic_index_in_dim(kpos_st, layer_idx, 0, False)
         else:
-            k = cache["k"].at[bidx, slot].set(k_new.astype(kd))
-            v = cache["v"].at[bidx, slot].set(v_new.astype(vd))
-            kpos = cache["pos"].at[bidx, slot].set(posb)
+            k = cache["k"].at[bidx, slot].set(k_new.astype(kd), mode="drop")
+            v = cache["v"].at[bidx, slot].set(v_new.astype(vd), mode="drop")
+            kpos = cache["pos"].at[bidx, slot].set(posb, mode="drop")
             new_cache = {"k": shard(k, "batch", "seq_shard", None, None),
                          "v": shard(v, "batch", "seq_shard", None, None),
                          "pos": kpos}
@@ -236,9 +247,10 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
         kk, vv, kp = cross_kv
         new_cache = cache
     g = num_heads // num_kv_heads
-    qr = q.reshape(b, 1, num_kv_heads, g, head_dim)
+    s = x.shape[1]
+    qr = q.reshape(b, s, num_kv_heads, g, head_dim)
     mask = _causal_mask(posb, kp, window) if cross_kv is None else None
     o = _sdpa(qr, kk.astype(qr.dtype), vv.astype(qr.dtype), mask)
-    o = o.reshape(b, 1, num_heads * head_dim)
+    o = o.reshape(b, s, num_heads * head_dim)
     y = smol.linear_apply(params["wo"], o, qcfg, None)
     return y, new_cache

@@ -206,12 +206,13 @@ def loss_fn(params, batch: Dict, cfg, rng):
 
 # --------------------------------------------------------------- decode ----
 def _sinusoid_at(pos, d: int):
-    """Sinusoidal embedding evaluated at arbitrary positions [B] -> [B, d]."""
-    dim = jnp.arange(0, d, 2)[None, :]
-    ang = pos[:, None].astype(jnp.float32) / (1e4 ** (dim / d))
-    out = jnp.zeros((pos.shape[0], d), jnp.float32)
-    out = out.at[:, 0::2].set(jnp.sin(ang))
-    out = out.at[:, 1::2].set(jnp.cos(ang))
+    """Sinusoidal embedding evaluated at arbitrary positions [...] ->
+    [..., d]."""
+    dim = jnp.arange(0, d, 2)
+    ang = pos[..., None].astype(jnp.float32) / (1e4 ** (dim / d))
+    out = jnp.zeros(pos.shape + (d,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    out = out.at[..., 1::2].set(jnp.cos(ang))
     return out
 
 
@@ -262,23 +263,13 @@ def build_cross_cache(params, cfg, enc_out) -> Dict:
             "pos": jnp.repeat(pos[None], cfg.num_layers, axis=0)}
 
 
-def decode_step(params, cfg, cache: Dict, tokens, pos, *,
-                inplace_cache: bool = False):
-    """One decode step. tokens [B] int32, pos [B] int32.
-    Returns (logits [B, V] fp32, new cache).
-
-    inplace_cache: carry the stacked cache through the decode scan and
-    scatter the new token in place ([l, b, slot] — one token's bytes)
-    instead of the xs->ys per-layer rebuild. On TPU the carried scatter
-    aliases (write traffic ~0); the CPU backend legalizes bf16 scatter via
-    whole-buffer f32 converts, inverting the win — hence opt-in
-    (EXPERIMENTS.md §Perf C3)."""
+def _decode_core(params, cfg, cache: Dict, x, pos, *,
+                 inplace_cache: bool = False):
+    """Shared decode/prefill body: run x [B, S, D] at positions ``pos``
+    ([B] or [B, S]; lanes with pos < 0 are masked — their ring-cache writes
+    are dropped) through every layer group, updating the cache. Returns
+    (hidden [B, S, D] pre-final-norm, new cache)."""
     qcfg = cfg.quant
-    dt = jnp.dtype(cfg.dtype)
-    x = embed_lookup(params["embed"], tokens[:, None], dt)   # [B,1,D]
-    if cfg.encoder_layers:
-        x = x + _sinusoid_at(pos, cfg.d_model).astype(dt)[:, None]
-
     new_groups = []
     for gi, (g, (kind, count)) in enumerate(zip(params["groups"],
                                                 cfg.layer_plan())):
@@ -318,6 +309,82 @@ def decode_step(params, cfg, cache: Dict, tokens, pos, *,
         new_groups.append(new_cache_g)
     new_cache = dict(cache)
     new_cache["groups"] = new_groups
+    return x, new_cache
+
+
+def decode_step(params, cfg, cache: Dict, tokens, pos, *, active=None,
+                inplace_cache: bool = False):
+    """One decode step. tokens [B] int32, pos [B] int32.
+    Returns (logits [B, V] fp32, new cache).
+
+    active: optional [B] bool — per-slot mask for continuous batching
+    (DESIGN.md §10). Inactive slots get position -1: their ring-cache
+    writes are dropped (out-of-bounds scatter) and their logits are
+    garbage the engine ignores; active slots are bitwise unaffected, which
+    is what makes the engine token-parity with lockstep decoding.
+
+    inplace_cache: carry the stacked cache through the decode scan and
+    scatter the new token in place ([l, b, slot] — one token's bytes)
+    instead of the xs->ys per-layer rebuild. On TPU the carried scatter
+    aliases (write traffic ~0); the CPU backend legalizes bf16 scatter via
+    whole-buffer f32 converts, inverting the win — hence opt-in
+    (EXPERIMENTS.md §Perf C3)."""
+    dt = jnp.dtype(cfg.dtype)
+    if active is not None:
+        pos = jnp.where(active, pos, -1)
+    x = embed_lookup(params["embed"], tokens[:, None], dt)   # [B,1,D]
+    if cfg.encoder_layers:
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(dt)[:, None]
+    x, new_cache = _decode_core(params, cfg, cache, x, pos,
+                                inplace_cache=inplace_cache)
     x = _norm(cfg, params["final_norm"], x)
     lg = _readout(params, cfg, x[:, 0])
     return lg, new_cache
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill feeds S > 1 tokens through the decode path at once;
+    that needs position-indexed cache writes only. SSM/hybrid blocks carry
+    a strictly sequential recurrent state and the audio enc-dec family uses
+    per-token sinusoids in decode — those fall back to 1-token prefill."""
+    if cfg.encoder_layers or cfg.family == "audio":
+        return False
+    return not any("mamba" in kind or kind.startswith("hybrid")
+                   for kind, _ in cfg.layer_plan())
+
+
+def prefill_step(params, cfg, cache: Dict, tokens, pos, last_idx, *,
+                 inplace_cache: bool = False):
+    """Chunked prefill step (continuous batching, DESIGN.md §10): feed up
+    to C tokens per slot into the KV cache in ONE forward. tokens [B, C]
+    int32, pos [B, C] int32 with -1 marking padding lanes (slots with fewer
+    than C tokens to feed — their writes are dropped), last_idx [B] the
+    lane index of each slot's last real token. Returns (logits [B, V] fp32
+    for each slot's last token, new cache).
+
+    Requires ``supports_chunked_prefill(cfg)`` — the engine gates this."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dt)            # [B,C,D]
+    x, new_cache = _decode_core(params, cfg, cache, x, pos,
+                                inplace_cache=inplace_cache)
+    x = _norm(cfg, params["final_norm"], x)
+    h = jnp.take_along_axis(
+        x, last_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    lg = _readout(params, cfg, h)
+    return lg, new_cache
+
+
+def reset_cache_slots(cache: Dict, slots):
+    """Wipe the cache rows of the given batch slots (request admission /
+    eviction in the continuous-batching engine). Cache leaves are stacked
+    [L, B, ...]: ``pos`` leaves become -1 (ring entries read as empty),
+    K/V/SSM state leaves become 0. Rows not listed are untouched."""
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def fix(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name == "pos":
+            return leaf.at[:, idx].set(-1)
+        return leaf.at[:, idx].set(jnp.zeros((), leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(fix, cache)

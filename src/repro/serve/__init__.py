@@ -1,1 +1,1 @@
-from . import engine, kv_quant
+from . import engine, kv_quant, scheduler

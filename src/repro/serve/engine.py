@@ -1,13 +1,21 @@
-"""Batched decode engine over packed SONIQ weights.
+"""Serve engines over packed SONIQ weights (DESIGN.md §10).
 
-The engine consumes the output of ``soniq.to_serve`` (or converts a trained
-QAT tree itself via ``repro.api.transforms.convert_tree``): per-layer
-precisions re-budgeted to the static segment mix (scan groups must share
-packed shapes — groups that trained 4-bit keep their 4 bits while the
-budget allows, ranked by trained precision then weight magnitude), channels
-reordered (paper Obs. 4), codes bit-packed. It then runs greedy/temperature
-decoding with the ring KV cache; weights move as 1/2/4-bit carriers — the
-paper's deployment path.
+Two engines share the packed-weight serve path (``soniq.to_serve`` /
+``repro.api.transforms.convert_tree``: per-layer precisions re-budgeted to
+the static segment mix, channels reordered (paper Obs. 4), codes
+bit-packed into 1/2/4-bit carriers):
+
+* :class:`LockstepEngine` — the original fixed-batch loop: one blocking
+  ``generate()`` call, full-batch prefill, every row decodes until the
+  longest request finishes. Kept as the parity/throughput baseline.
+* :class:`DecodeEngine` — request-level **continuous batching**: an
+  admission queue of :class:`repro.serve.scheduler.Request`, slot-based
+  batch state, chunked prefill that fills idle slots while other slots
+  decode, per-slot sampling params (temperature + seeded rng), and a
+  streaming iterator returning :class:`Completion` objects as requests
+  finish. Per-slot rows are independent, so its temperature-0 tokens are
+  identical to the lockstep engine's (pinned by
+  ``tests/test_serve_scheduler.py``).
 
 ``rebudget_pbits`` / ``serve_convert`` are deprecation shims kept for
 external callers; the implementations moved to ``repro.api.transforms``.
@@ -16,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional
+from typing import Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +34,8 @@ from repro.api import transforms as lifecycle
 from repro.core.phases import Phase
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
+
+from .scheduler import Completion, Request, Scheduler
 
 
 def rebudget_pbits(pbits: np.ndarray, w: np.ndarray,
@@ -52,16 +62,28 @@ def serve_convert(params, qcfg: QuantConfig):
 class EngineConfig:
     max_batch: int = 8
     cache_len: int = 256
-    temperature: float = 0.0        # 0 = greedy
+    temperature: float = 0.0        # 0 = greedy (default for generate())
     cache_dtype: str = "float32"
+    # Prompt tokens fed per slot per prefill step (1 = token-level prefill;
+    # auto-reduced to 1 for SSM/hybrid/enc-dec archs, which need strictly
+    # sequential state updates — see lm.supports_chunked_prefill).
+    prefill_chunk: int = 8
 
 
-class DecodeEngine:
-    """Minimal batched generation loop (greedy / temperature sampling)."""
+class _PackedEngine:
+    """Shared packed-params + jitted-step plumbing of both engines."""
 
     def __init__(self, params, arch_cfg, ecfg: EngineConfig,
                  *, already_serve: bool = False):
         self.cfg = arch_cfg.with_quant_mode(Phase.SERVE)
+        if self.cfg.quant.act_scale_mode == "per_tensor":
+            # Per-tensor dynamic act scales couple batch rows; serving needs
+            # every request's tokens independent of batch composition
+            # (continuous batching + lockstep parity), so the engines run
+            # the row-independent per-token scale (DESIGN.md §10).
+            self.cfg = dataclasses.replace(
+                self.cfg, quant=dataclasses.replace(
+                    self.cfg.quant, act_scale_mode="per_token"))
         self.ecfg = ecfg
         self.params = params if already_serve else lifecycle.convert_tree(
             params, self.cfg.quant, rebudget=True)
@@ -71,6 +93,14 @@ class DecodeEngine:
     def init_cache(self, batch: int):
         return lm.init_cache(self.cfg, batch, self.ecfg.cache_len,
                              jnp.dtype(self.ecfg.cache_dtype))
+
+
+class LockstepEngine(_PackedEngine):
+    """Fixed-batch generation loop (greedy / shared-rng temperature
+    sampling): the pre-continuous-batching baseline. Every row prefills and
+    decodes in lockstep, so mixed-length batches burn full decode steps on
+    rows that are already finished — `benchmarks/serve_throughput.py`
+    quantifies the gap."""
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  rng: Optional[jax.Array] = None) -> np.ndarray:
@@ -102,15 +132,197 @@ class DecodeEngine:
             k, logits / self.ecfg.temperature).astype(jnp.int32)
 
 
+def _key_bits(key) -> np.ndarray:
+    """Raw uint32 bits of a PRNG key (accepts legacy raw or typed keys)."""
+    if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(key, np.uint32)
+
+
+def _sample_tokens(logits, keys, temps, counts):
+    """Per-slot sampling: greedy where temp <= 0, else categorical with the
+    slot's request key folded by its generated-token index (scheduling-
+    invariant: request i's t-th token always uses fold_in(key_i, t))."""
+    def one(lg, key, temp, n):
+        greedy = jnp.argmax(lg, -1).astype(jnp.int32)
+        k = jax.random.fold_in(key, n)
+        samp = jax.random.categorical(
+            k, lg / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+        return jnp.where(temp > 0, samp, greedy)
+    return jax.vmap(one)(logits, keys, temps, counts)
+
+
+class DecodeEngine(_PackedEngine):
+    """Request-level continuous-batching engine (DESIGN.md §10).
+
+    Usage — streaming::
+
+        eng = DecodeEngine(params, cfg, EngineConfig(max_batch=8))
+        for completion in eng.serve(requests):   # yields as they finish
+            ...
+
+    or incremental (``submit`` / ``step``) for request loops that interleave
+    admission with other work. ``generate()`` is a lockstep-compatible
+    wrapper (same-shape prompts in, stacked tokens out) used by the legacy
+    callers; at temperature 0 it returns exactly the lockstep tokens.
+    """
+
+    def __init__(self, params, arch_cfg, ecfg: EngineConfig,
+                 *, already_serve: bool = False):
+        super().__init__(params, arch_cfg, ecfg,
+                         already_serve=already_serve)
+        self.chunk = (ecfg.prefill_chunk
+                      if lm.supports_chunked_prefill(self.cfg) else 1)
+        b = ecfg.max_batch
+
+        # Sampling is fused into the jitted step: one dispatch and one
+        # [B]-int transfer per engine step (the decode loop is host-latency
+        # bound at small batch).
+        def decode_sample(p, c, t, pos, act, keys, temps, counts):
+            logits, c2 = lm.decode_step(p, self.cfg, c, t, pos, active=act)
+            return _sample_tokens(logits, keys, temps, counts), c2
+
+        def prefill_sample(p, c, t, pos, last, keys, temps, counts):
+            logits, c2 = lm.prefill_step(p, self.cfg, c, t, pos, last)
+            return _sample_tokens(logits, keys, temps, counts), c2
+
+        self._decode = jax.jit(decode_sample)
+        self._prefill = jax.jit(prefill_sample)
+        # One compiled reset for any admission set: idx is padded to
+        # max_batch by repeating the first slot (re-wiping a row is
+        # idempotent), so eager per-admission scatters never compile.
+        self._reset = jax.jit(lm.reset_cache_slots)
+        self.sched = Scheduler(b)
+        self.cache = None
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._temps = np.zeros((b,), np.float32)
+
+    # --------------------------------------------------------- requests ----
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its request_id."""
+        return self.sched.submit(request)
+
+    def reset(self):
+        """Drop all queued/active requests and cache state."""
+        self.sched = Scheduler(self.ecfg.max_batch)
+        self.cache = None
+
+    # ------------------------------------------------------------- step ----
+    def step(self) -> List[Completion]:
+        """One engine step: admit arrived requests into free slots (wiping
+        their cache rows), feed every active slot (chunked prefill for
+        prompt-phase slots, one token for decode-phase slots), sample, and
+        return any completions (their slots free up for the next step)."""
+        b = self.ecfg.max_batch
+        if self.cache is None:
+            self.cache = self.init_cache(b)
+        admitted = self.sched.admit()
+        if admitted:
+            idx = np.full((b,), admitted[0][0], np.int32)
+            idx[:len(admitted)] = [s for s, _ in admitted]
+            self.cache = self._reset(self.cache, idx)
+            for slot, req in admitted:
+                self._keys[slot] = _key_bits(jax.random.PRNGKey(req.seed))
+                self._temps[slot] = req.temperature
+        plan = self.sched.plan(self.chunk)
+        if not plan:                       # idle: let queued arrivals age in
+            return self.sched.advance({}, {})
+        widths = {s: len(t) for s, t in plan.items()}
+        counts = np.zeros((b,), np.int32)
+        for slot in plan:
+            counts[slot] = len(self.sched.slots[slot].generated)
+        if max(widths.values()) > 1:
+            c = self.chunk                 # fixed width: one compiled shape
+            tokens = np.zeros((b, c), np.int32)
+            pos = np.full((b, c), -1, np.int32)
+            last = np.zeros((b,), np.int32)
+            for slot, toks in plan.items():
+                n = widths[slot]
+                st = self.sched.slots[slot]
+                tokens[slot, :n] = toks
+                pos[slot, :n] = st.n_fed + np.arange(n)
+                last[slot] = n - 1
+            out, self.cache = self._prefill(self.params, self.cache,
+                                            tokens, pos, last, self._keys,
+                                            self._temps, counts)
+        else:
+            tokens = np.zeros((b,), np.int32)
+            pos = np.zeros((b,), np.int32)
+            active = np.zeros((b,), bool)
+            for slot, toks in plan.items():
+                tokens[slot] = toks[0]
+                pos[slot] = self.sched.slots[slot].n_fed
+                active[slot] = True
+            out, self.cache = self._decode(self.params, self.cache,
+                                           tokens, pos, active, self._keys,
+                                           self._temps, counts)
+        sampled = np.asarray(out)
+        return self.sched.advance(
+            widths, {s: int(sampled[s]) for s in plan})
+
+    # -------------------------------------------------------- streaming ----
+    def run(self) -> Iterator[Completion]:
+        """Drive steps until queue and slots drain, yielding completions in
+        finish order."""
+        while self.sched.has_work():
+            yield from self.step()
+
+    def serve(self, requests: Iterable[Request]) -> Iterator[Completion]:
+        """Submit all requests, then stream completions."""
+        for r in requests:
+            self.submit(r)
+        return self.run()
+
+    # ------------------------------------------------------------ compat ----
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 rng: Optional[jax.Array] = None) -> np.ndarray:
+        """Lockstep-compatible batch call: same-length prompts [B, S0] ->
+        stacked [B, S0 + max_new]. Resets any in-flight engine state.
+        Greedy unless the engine temperature > 0 AND ``rng`` is given (the
+        per-request seeds are then derived from ``rng``; the stream is
+        reproducible but not bitwise-identical to lockstep sampling, which
+        shares one rng across the batch)."""
+        self.reset()
+        prompts = np.asarray(prompts, np.int32)
+        temp = self.ecfg.temperature if rng is not None else 0.0
+        base = int(_key_bits(rng).ravel()[-1]) if rng is not None else 0
+        reqs = [Request(prompt=p, max_new_tokens=max_new_tokens,
+                        temperature=temp, seed=base + i)
+                for i, p in enumerate(prompts)]
+        out = {c.request_id - reqs[0].request_id: c.tokens
+               for c in self.serve(reqs)}
+        return np.stack([out[i] for i in range(len(reqs))])
+
+
+# Leaf-name vocabulary for packed_model_bytes. Packed carriers count one
+# byte per element; fp leaves count their dtype itemsize; metadata leaves
+# (permutations / precision maps — the paper's "3 ints per layer" lives in
+# buffer shapes, not here) are excluded from the network-size metric.
+_PACKED_LEAVES = frozenset({"w4", "w2", "w1"})
+_FP_LEAVES = frozenset({"w", "table", "wscale", "b", "g", "conv_w",
+                        "conv_b", "A_log", "D", "dt_bias", "norm_g"})
+_META_LEAVES = frozenset({"perm", "pbits_sorted", "pbits", "s"})
+
+
 def packed_model_bytes(serve_params) -> int:
-    """Total packed weight bytes (the paper's network-size metric)."""
+    """Total packed weight bytes (the paper's network-size metric).
+
+    Every leaf name must be classified (packed carrier / fp weight /
+    metadata); an unknown name raises ``ValueError`` instead of being
+    silently skipped — a renamed carrier leaf must not make the metric
+    under-report."""
     total = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(serve_params)[0]:
         if leaf is None:
             continue
         name = str(getattr(path[-1], "key", ""))
-        if name in ("w4", "w2", "w1"):
+        if name in _PACKED_LEAVES:
             total += leaf.size
-        elif name in ("w", "table", "wscale", "b"):
+        elif name in _FP_LEAVES:
             total += leaf.size * np.dtype(leaf.dtype).itemsize
+        elif name not in _META_LEAVES:
+            raise ValueError(
+                f"packed_model_bytes: unknown leaf {jax.tree_util.keystr(path)!r}"
+                f" (name {name!r}) — classify it in engine._PACKED_LEAVES/"
+                "_FP_LEAVES/_META_LEAVES so the size metric stays honest")
     return int(total)

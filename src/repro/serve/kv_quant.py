@@ -2,8 +2,11 @@
 
 K/V live as SMOL 4-bit codes packed 2-per-byte with one fp16-scale per
 (batch, slot, kv-head): cache bytes drop 4x vs bf16 (the decode_32k cells
-are KV-read-bound at large batch). Quantization error matches the W4 grid
-(~3% relerr on attention outputs at 4 bits — tests pin this).
+are KV-read-bound at large batch). Quantization error matches the W4 grid:
+round-trip RMS error <= 3% of each head's dynamic range (worst-case
+element 3.5% — the half-step bound); on gaussian K/V that is ~10%
+norm-relative, which attention outputs inherit. Tests pin these bounds
+(`tests/test_kv_quant_cluster.py`).
 
 The packed layout matches kernels/packed_matmul's carrier convention, so a
 fused quantized-KV flash-decode Pallas kernel can consume it directly; the
@@ -85,3 +88,27 @@ def read_qkv_cache(cache: Dict, dtype=jnp.bfloat16):
 
 def cache_bytes(cache: Dict) -> int:
     return sum(v.size * v.dtype.itemsize for v in cache.values())
+
+
+# ------------------------------------------------- slot management ----
+def reset_slots(cache: Dict, slots) -> Dict:
+    """Wipe the cache rows of the given batch slots (continuous-batching
+    admission/eviction, DESIGN.md §10): codes/scales zero, ``pos`` -1 so
+    every ring entry of the row reads as empty. Rows not listed are
+    untouched, and the packed carrier layout is preserved — the fused
+    flash-decode kernel never sees a half-valid row."""
+    idx = jnp.asarray(slots, jnp.int32)
+    out = {k: v.at[idx].set(jnp.zeros((), v.dtype))
+           for k, v in cache.items() if k != "pos"}
+    out["pos"] = cache["pos"].at[idx].set(-1)
+    return out
+
+
+def evict_slot(cache: Dict, slot: int) -> Dict:
+    """Free one slot's row (request completion/cancellation)."""
+    return reset_slots(cache, [slot])
+
+
+def slot_lengths(cache: Dict) -> jax.Array:
+    """Number of valid (written, non-evicted) ring entries per slot [B]."""
+    return jnp.sum(cache["pos"] >= 0, axis=1).astype(jnp.int32)

@@ -1,0 +1,197 @@
+"""Request-level continuous-batching scheduler (DESIGN.md §10).
+
+The scheduler owns the *host-side* state machine of the serve engine:
+
+  * an **admission queue** of :class:`Request` objects ordered by
+    ``(arrival_step, submit order)``;
+  * a **free-list** of the engine's ``max_batch`` batch slots;
+  * per-slot :class:`SlotState` tracking where each admitted request is in
+    its lifecycle (``PREFILL`` — prompt tokens still being fed into the KV
+    cache — then ``DECODE`` — sampling new tokens — then eviction).
+
+It is deliberately jax-free: the engine (``serve/engine.py``) asks the
+scheduler *what to feed each slot this step* and tells it *what was
+sampled*; all device work (decode step, sampling) stays in the engine.
+Invariants (pinned by ``tests/test_serve_scheduler.py``):
+
+  * a request's token stream depends only on its own prompt, seed and
+    sampling params — never on batch composition (slot rows are
+    independent), so continuous batching is token-parity with the lockstep
+    engine at temperature 0;
+  * a slot is reset (KV rows wiped, ``pos = -1``) at admission, never
+    lazily, so an evicted request can leave garbage behind;
+  * admission happens at step start: a slot freed by a completion in step
+    ``t`` is reusable in step ``t + 1``;
+  * requests are admitted in ``(arrival_step, submit order)`` order — no
+    reordering, no starvation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int32 token array; ``seed`` drives the per-request
+    sampling rng (folded with the generated-token index, so the stream is
+    reproducible under any batch schedule); ``arrival_step`` lets synthetic
+    workloads model staggered traffic — the scheduler will not admit a
+    request before its arrival step.
+    """
+    prompt: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    arrival_step: int = 0
+    eos_id: Optional[int] = None
+    request_id: Optional[int] = None     # (re)assigned at every submit()
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0, "empty prompt"
+        assert self.max_new_tokens > 0, self.max_new_tokens
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request, streamed back by the engine."""
+    request_id: int
+    request: Request
+    tokens: np.ndarray          # [S0 + num generated] prompt + generated
+    new_tokens: np.ndarray      # [num generated]
+    finish_reason: str          # "length" | "eos"
+    finished_step: int          # engine step at which the request finished
+    steps: int                  # engine steps the request occupied a slot
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Request
+    n_fed: int = 0              # tokens fed into the cache so far
+    generated: Optional[List[int]] = None
+    admitted_step: int = 0
+
+    def __post_init__(self):
+        if self.generated is None:
+            self.generated = []
+
+    @property
+    def phase(self) -> str:
+        return PREFILL if self.n_fed < len(self.request.prompt) else DECODE
+
+    def next_tokens(self, chunk: int) -> np.ndarray:
+        """The (up to ``chunk``) tokens this slot feeds next step: remaining
+        prompt tokens while prefilling, else the last sampled token."""
+        prompt = self.request.prompt
+        if self.n_fed < len(prompt):
+            return prompt[self.n_fed:self.n_fed + chunk]
+        return np.asarray([self.generated[-1]], np.int32)
+
+    @property
+    def samples_this_step(self) -> bool:
+        """Whether the logits of this slot's last fed token are consumed
+        (true once the final prompt token has entered the cache)."""
+        return self.n_fed >= len(self.request.prompt)
+
+
+class Scheduler:
+    """Admission queue + slot free-list + per-slot lifecycle state."""
+
+    def __init__(self, max_batch: int):
+        assert max_batch > 0
+        self.max_batch = max_batch
+        self._queue: List[Tuple[int, int, Request]] = []   # heap
+        self._ticket = itertools.count()
+        self._next_id = itertools.count()
+        self.free_slots: List[int] = list(range(max_batch))[::-1]
+        self.slots: Dict[int, SlotState] = {}
+        self.step_count = 0
+
+    # ------------------------------------------------------------ queue ----
+    def submit(self, request: Request) -> int:
+        # Always assign a fresh id: a re-submitted Request object (e.g.
+        # after an engine reset) must not collide with this scheduler's
+        # freshly issued ids.
+        request.request_id = next(self._next_id)
+        heapq.heappush(self._queue,
+                       (request.arrival_step, next(self._ticket), request))
+        return request.request_id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or bool(self.slots)
+
+    # -------------------------------------------------------- admission ----
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Move arrived requests from the queue into free slots (call at
+        step start). Returns [(slot, request)] for the engine to reset the
+        KV rows of."""
+        admitted = []
+        while self.free_slots and self._queue \
+                and self._queue[0][0] <= self.step_count:
+            _, _, req = heapq.heappop(self._queue)
+            slot = self.free_slots.pop()
+            self.slots[slot] = SlotState(req, admitted_step=self.step_count)
+            admitted.append((slot, req))
+        return admitted
+
+    # ------------------------------------------------------- step plan  ----
+    def plan(self, prefill_chunk: int) -> Dict[int, np.ndarray]:
+        """{slot: tokens to feed this step} (1 token for decoding slots, up
+        to ``prefill_chunk`` for prefilling ones)."""
+        return {s: st.next_tokens(max(prefill_chunk, 1))
+                for s, st in self.slots.items()}
+
+    # ------------------------------------------------------ advancement ----
+    def advance(self, fed: Dict[int, int], sampled: Dict[int, int]
+                ) -> List[Completion]:
+        """Commit one engine step: ``fed[slot]`` tokens entered the cache,
+        ``sampled[slot]`` is the token drawn from the slot's last-token
+        logits (ignored for slots still mid-prefill). Returns completions;
+        their slots go back on the free-list (reusable next step)."""
+        done: List[Completion] = []
+        for slot, n in fed.items():
+            st = self.slots[slot]
+            st.n_fed += n
+            if not st.samples_this_step:
+                continue                       # still prefilling
+            tok = int(sampled[slot])
+            st.generated.append(tok)
+            req = st.request
+            eos = req.eos_id is not None and tok == req.eos_id
+            if eos or len(st.generated) >= req.max_new_tokens:
+                done.append(self._finish(slot, "eos" if eos else "length"))
+        self.step_count += 1
+        return done
+
+    def _finish(self, slot: int, reason: str) -> Completion:
+        st = self.slots.pop(slot)
+        self.free_slots.append(slot)
+        new = np.asarray(st.generated, np.int32)
+        return Completion(
+            request_id=st.request.request_id, request=st.request,
+            tokens=np.concatenate([st.request.prompt, new]),
+            new_tokens=new, finish_reason=reason,
+            finished_step=self.step_count,
+            steps=self.step_count - st.admitted_step + 1)
+
+    def evict(self, slot: int) -> Completion:
+        """Force-finish a slot (admin path: cancellation / preemption)."""
+        return self._finish(slot, "evicted")

@@ -29,12 +29,14 @@ def test_train_launcher_runs_and_checkpoints(tmp_path):
 
 
 def test_serve_launcher_generates(tmp_path):
+    # mamba2 exercises the chunked-prefill fallback (SSM -> 1 token/step).
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch",
-         "mamba2-2.7b", "--reduced", "--requests", "2", "--prompt-len", "4",
-         "--new-tokens", "6", "--cache-len", "32"],
+         "mamba2-2.7b", "--reduced", "--requests", "2", "--max-batch", "2",
+         "--prompt-len", "4", "--new-tokens", "6", "--cache-len", "32"],
         env=ENV, cwd=os.getcwd(), capture_output=True, text=True,
         timeout=900)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "tok/s" in out.stdout
-    assert "req 1:" in out.stdout
+    assert "[continuous]" in out.stdout
+    assert "req 1 " in out.stdout

@@ -139,6 +139,119 @@ def test_packed_size_matches_bpp():
     assert abs(bpp - 2.75) < 0.05
 
 
+# ------------------------------------------- serve-path pack round-trip ----
+# pack_linear / pack_conv (the soniq deploy transforms) feed
+# pack.dequant_packed_carriers (the serve forward's arithmetic); these
+# property tests pin that the full path — rebudget-free: quantize, reorder,
+# bit-pack, unpack, dequant — recovers the quantized grid exactly for any
+# segment mix, including k < group_size (single whole group) and the
+# uniform all-4-bit / all-2-bit budgets.
+
+def _expected_grid(w_sorted, pbits_sorted, scales, g):
+    """fake_quant oracle for the packed path: [K, N] on the SMOL grid."""
+    if scales is None:
+        s_full = np.ones((w_sorted.shape[0],), np.float32)
+    else:
+        s_full = np.repeat(np.asarray(scales, np.float32), g)
+    ws = w_sorted / s_full[:, None]
+    q = np.asarray(quant.fake_quant(
+        jnp.asarray(ws.T), jnp.asarray(pbits_sorted, jnp.float32), 1.0, g)).T
+    return q * s_full[:, None]
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([(3, 2, 3), (8, 0, 0), (0, 8, 0), (0, 0, 8),
+                        (1, 1, 0), (2, 0, 6)]),
+       st.sampled_from(["none", "per_group"]),
+       st.integers(1, 9))
+@settings(max_examples=25, deadline=None)
+def test_property_pack_linear_dequant_roundtrip(seed, mix_groups,
+                                                scale_mode, n):
+    from repro.api import transforms
+    from repro.core.qtypes import GROUP_SIZE
+
+    g4, g2, g1 = mix_groups
+    k = (g4 + g2 + g1) * GROUP_SIZE
+    pbits = np.array([4] * g4 + [2] * g2 + [1] * g1, np.int8)
+    rng = np.random.default_rng(seed)
+    rng.shuffle(pbits)                      # pack_linear must reorder
+    lim = 1.99 if scale_mode == "none" else 3.0
+    w = rng.uniform(-lim, lim, size=(k, n)).astype(np.float32)
+    qcfg = QuantConfig(mode="serve", scale_mode=scale_mode)
+
+    packed = transforms.pack_linear({"w": w, "pbits": pbits}, qcfg)
+    wd = np.asarray(pack.dequant_packed_carriers(
+        {name: packed[name] for name in ("w4", "w2", "w1")}, jnp.float32,
+        wscale=packed["wscale"], group_size=GROUP_SIZE))
+    assert wd.shape == (k, n)
+    perm = np.asarray(packed["perm"])
+    want = _expected_grid(w[perm], np.asarray(packed["pbits_sorted"]),
+                          None if packed["wscale"] is None
+                          else np.asarray(packed["wscale"]), GROUP_SIZE)
+    np.testing.assert_allclose(wd, want, atol=2e-5)
+    # the permutation is a bijection feeding the serve matmul's x-gather
+    assert sorted(perm.tolist()) == list(range(k))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4, 6, 8, 12]))
+@settings(max_examples=15, deadline=None)
+def test_property_pack_linear_narrow_k_roundtrip(seed, k):
+    """k < group_size: one whole group, held at 4 bits (qcfg.group_pbits),
+    effective group size k."""
+    from repro.api import transforms
+
+    qcfg = QuantConfig(mode="serve", scale_mode="per_group")
+    pbits = qcfg.group_pbits(k)
+    assert pbits.tolist() == [4]
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-2.5, 2.5, size=(k, 3)).astype(np.float32)
+    packed = transforms.pack_linear({"w": w, "pbits": pbits}, qcfg)
+    g = qcfg.eff_group_size(k)
+    assert g == k
+    wd = np.asarray(pack.dequant_packed_carriers(
+        {name: packed[name] for name in ("w4", "w2", "w1")}, jnp.float32,
+        wscale=packed["wscale"], group_size=g))
+    want = _expected_grid(w[np.asarray(packed["perm"])],
+                          np.asarray(packed["pbits_sorted"]),
+                          np.asarray(packed["wscale"]), g)
+    np.testing.assert_allclose(wd, want, atol=2e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([(2, 1, 1), (4, 0, 0), (0, 4, 0), (1, 2, 1)]),
+       st.sampled_from([(1, 1), (3, 3), (2, 5)]))
+@settings(max_examples=15, deadline=None)
+def test_property_pack_conv_dequant_roundtrip(seed, mix_groups, spatial):
+    """Conv leaves quantize along Cin; the packed buffers keep
+    [rows, kh, kw, Cout] so the CNN serve forward reconstructs the kernel
+    by reshaping back to 2-D — exactly what this round-trip does."""
+    from repro.api import transforms
+    from repro.core.qtypes import GROUP_SIZE
+
+    g4, g2, g1 = mix_groups
+    kh, kw = spatial
+    cin = (g4 + g2 + g1) * GROUP_SIZE
+    cout = 4
+    pbits = np.array([4] * g4 + [2] * g2 + [1] * g1, np.int8)
+    rng = np.random.default_rng(seed)
+    rng.shuffle(pbits)
+    w = rng.uniform(-2.0, 2.0, size=(kh, kw, cin, cout)).astype(np.float32)
+    qcfg = QuantConfig(mode="serve", scale_mode="per_group")
+    packed = transforms.pack_conv({"w": w, "pbits": pbits}, qcfg)
+    for name, p in (("w4", 4), ("w2", 2), ("w1", 1)):
+        assert packed[name].shape[1:] == (kh, kw, cout)
+    bufs = {name: jnp.asarray(np.asarray(packed[name]).reshape(
+        packed[name].shape[0], kh * kw * cout)) for name in ("w4", "w2", "w1")}
+    wd = np.asarray(pack.dequant_packed_carriers(
+        bufs, jnp.float32, wscale=packed["wscale"],
+        group_size=GROUP_SIZE))                       # [Cin, kh*kw*Cout]
+    w2d = np.moveaxis(w, 2, 0).reshape(cin, -1)
+    want = _expected_grid(w2d[np.asarray(packed["perm"])],
+                          np.asarray(packed["pbits_sorted"]),
+                          np.asarray(packed["wscale"]), GROUP_SIZE)
+    np.testing.assert_allclose(wd, want, atol=2e-5)
+
+
 def test_fixed_point_16_6():
     x = jnp.asarray([0.015625, 0.02, 1000.0, -1000.0])
     y = np.asarray(quant.to_fixed_16_6(x))

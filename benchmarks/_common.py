@@ -3,8 +3,10 @@ paper-table reproductions, plus CSV helpers."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
+from pathlib import Path
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -22,6 +24,34 @@ BENCH_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "150"))
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+BENCH_BACKEND_JSON = Path(__file__).resolve().parent / "BENCH_backend.json"
+
+
+def record_backend_bench(section: str, payload: Dict) -> None:
+    """Merge ``payload`` under ``section`` in BENCH_backend.json — the
+    cross-benchmark record of per-kernel-backend performance
+    (serve_throughput tokens/s, runtime_proxy per-op microseconds) that
+    the backend perf trajectory is measured against."""
+    data: Dict = {}
+    if BENCH_BACKEND_JSON.exists():
+        try:
+            data = json.loads(BENCH_BACKEND_JSON.read_text())
+        except ValueError:
+            data = {}
+    section_data = data.setdefault(section, {})
+    for key, value in payload.items():
+        # One-level deep merge: a partial sweep (--backends xla_ref) must
+        # not drop the other backends' recorded numbers.
+        if isinstance(value, dict) and isinstance(section_data.get(key),
+                                                  dict):
+            section_data[key].update(value)
+        else:
+            section_data[key] = value
+    BENCH_BACKEND_JSON.write_text(json.dumps(data, indent=1,
+                                             sort_keys=True) + "\n")
+    print(f"[bench] wrote {section} -> {BENCH_BACKEND_JSON}", flush=True)
 
 
 def timed(fn, *args, **kw):

@@ -14,7 +14,9 @@ def main() -> None:
                    table2_patterns)
     benches = [
         ("table2_patterns", table2_patterns.main),
-        ("runtime_proxy", runtime_proxy.main),
+        # explicit empty argv: the harness's own sys.argv must not leak
+        # into the benchmark's argparse
+        ("runtime_proxy", lambda: runtime_proxy.main([])),
         ("table1_smol_variants", table1_smol_variants.main),
         ("fig7_accuracy_bpp", fig7_accuracy_bpp.main),
         ("fig9_layer_bpp", fig9_layer_bpp.main),

@@ -1,19 +1,34 @@
 """Paper §V-D run-time analog at the kernel level: bytes moved and MXU
 FLOPs per GEMM as a function of the precision pattern — the quantities the
 TPU roofline converts into time. Uses the real packed layouts (and checks
-the Pallas kernel agrees with its oracle on one spot shape)."""
+the Pallas kernel agrees with its oracle on one spot shape).
+
+``--backends`` times the packed-GEMM op on each kernel backend at the
+spot shape and appends the microseconds to ``BENCH_backend.json``;
+``--autotune`` additionally runs the block-size autotuner for the Pallas
+backends at that shape (persisting the winner in the on-disk autotune
+cache consulted by every later dispatch).
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backend import autotune, registry as backend_registry
 from repro.core import pack
 from repro.core.qtypes import QuantConfig
-from repro.kernels import ops, ref
-from . import _common
+from repro.kernels import ref
+
+try:                                   # package run (benchmarks.run / -m)
+    from . import _common
+except ImportError:                    # direct script run
+    import _common
 
 M, K, N = 64, 2048, 2048
+SPOT_M, SPOT_K, SPOT_N = 8, 256, 128
 
 
 def gemm_bytes(mix):
@@ -45,23 +60,71 @@ def run():
         r["w_compression"] = base / r["w_bytes"]
 
     # spot-check kernel vs oracle at this shape (correctness anchor)
-    key = jax.random.PRNGKey(0)
-    u = jax.random.randint(key, (256, 128), 0, 16).astype(jnp.uint8)
-    wp = pack.pack_codes(u, 4)
-    x = jax.random.normal(key, (8, 256))
-    got = ops.packed_segment_matmul(x, wp, None, p=4, interpret=True)
+    x, wp = _spot_operands()
+    got = backend_registry.resolve("pallas").packed_segment_matmul(
+        x, wp, None, p=4)
     want = ref.packed_segment_matmul_ref(x, wp, None, 4)
     err = float(jnp.max(jnp.abs(got - want)))
     rows.append(("kernel_spot_check", {"max_err": err}))
     return rows
 
 
-def main():
+def _spot_operands():
+    key = jax.random.PRNGKey(0)
+    u = jax.random.randint(key, (SPOT_K, SPOT_N), 0, 16).astype(jnp.uint8)
+    return jax.random.normal(key, (SPOT_M, SPOT_K)), pack.pack_codes(u, 4)
+
+
+def backend_sweep(backends, do_autotune: bool) -> dict:
+    """Time the packed GEMM per backend at the spot shape; optionally run
+    the block autotuner first (Pallas backends only — xla_ref has no block
+    knobs)."""
+    x, wp = _spot_operands()
+    shape = (SPOT_M, SPOT_K, SPOT_N)
+    out = {}
+    for name in backends:
+        b = backend_registry.resolve(name)
+
+        def call(**blocks):
+            return b.packed_segment_matmul(x, wp, None, p=4, **blocks)
+
+        entry = {}
+        if do_autotune and name.startswith("pallas"):
+            entry["autotuned_blocks"] = autotune.autotune_op(
+                call, "packed_segment_matmul", shape=shape, p=4,
+                dtype=x.dtype, backend=b.name)
+        entry["us"] = round(autotune.measure(call), 1)
+        err = float(jnp.max(jnp.abs(
+            call() - ref.packed_segment_matmul_ref(x, wp, None, 4))))
+        entry["max_err_vs_oracle"] = err
+        out[name] = entry
+        _common.csv_row(f"runtime_proxy.backend.{name}", entry["us"],
+                        f"max_err={err:.3g}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated kernel backends to time at the "
+                         "spot shape (default: all available; '' skips)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the block-size autotuner for the Pallas "
+                         "backends (persists to the autotune cache)")
+    args = ap.parse_args(argv)
+
     rows, us = _common.timed(run)
     for name, r in rows:
         _common.csv_row(
             f"runtime_proxy.{name}", us / len(rows),
             "|".join(f"{k}={v:.4g}" for k, v in r.items()))
+    names = (backend_registry.available() if args.backends is None
+             else [b for b in args.backends.split(",") if b])
+    if names:
+        sweep = backend_sweep(names, args.autotune)
+        _common.record_backend_bench("runtime_proxy", {
+            "shape": {"m": SPOT_M, "k": SPOT_K, "n": SPOT_N, "p": 4},
+            "backends": sweep})
     return rows
 
 

@@ -15,6 +15,11 @@ both engines over the SAME packed weights:
 Reports useful tokens/s (only each request's own ``max_new_tokens`` count
 as useful; padded prompt positions and overshoot decode steps are waste)
 and the speedup. The PR-2 acceptance bar is >= 1.5x on this workload.
+
+``--backends`` additionally sweeps the continuous engine across kernel
+backends (default: every backend available here) and appends the per-
+backend tokens/s to ``BENCH_backend.json`` next to this script — the
+record the perf trajectory of the backend work is measured against.
 """
 from __future__ import annotations
 
@@ -25,11 +30,19 @@ import jax
 import numpy as np
 
 from repro import soniq
+from repro.backend import registry as backend_registry
 from repro.configs.base import ArchConfig
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
 from repro.serve import engine as engine_lib
 from repro.serve.scheduler import Request
+
+try:                                   # package run (benchmarks.run)
+    from . import _common
+except ImportError:                    # direct script run
+    import _common
+
+record_backend_bench = _common.record_backend_bench
 
 
 def make_workload(num_requests: int, rng) -> list:
@@ -76,6 +89,10 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated kernel backends to sweep the "
+                         "continuous engine over (default: all available; "
+                         "'' skips the sweep)")
     args = ap.parse_args(argv)
 
     cfg = ArchConfig(
@@ -111,6 +128,28 @@ def main(argv=None):
     # harness CSV row (us per generated token; derived = speedup)
     print(f"serve_throughput,{1e6 * t_cont / useful:.1f},"
           f"{tps_cont / tps_lock:.2f}x_vs_lockstep", flush=True)
+
+    # ------------------------------------------- kernel-backend sweep ----
+    names = (backend_registry.available() if args.backends is None
+             else [b for b in args.backends.split(",") if b])
+    sweep = {}
+    for name in names:
+        eng = engine_lib.DecodeEngine(
+            params, cfg, soniq.EngineConfig(
+                max_batch=args.max_batch, cache_len=128,
+                prefill_chunk=args.prefill_chunk, backend=name))
+        list(eng.serve([Request(prompt=np.ones(5, np.int32),
+                                max_new_tokens=2, seed=0)]))  # warm jit
+        t = run_continuous(eng, reqs)
+        sweep[name] = {"tok_s": round(useful / t, 1),
+                       "seconds": round(t, 3)}
+        print(f"backend {name:>16}: {t:6.2f}s  {useful / t:8.1f} tok/s")
+    if sweep:
+        record_backend_bench("serve_throughput", {
+            "workload": {"requests": len(reqs), "useful_tokens": useful,
+                         "max_batch": args.max_batch,
+                         "prefill_chunk": args.prefill_chunk},
+            "backends": sweep})
     return tps_cont / tps_lock
 
 

@@ -21,7 +21,6 @@ import numpy as np                               # noqa: E402
 
 from repro import soniq                          # noqa: E402
 from repro.core import noise                     # noqa: E402
-from repro.kernels import ops                    # noqa: E402
 
 KEY = jax.random.PRNGKey(0)
 K, N, BATCH = 256, 128, 64
@@ -94,11 +93,14 @@ def main():
     for _ in range(100):
         qat = step2(qat)
 
-    # Deploy: pack + run the Pallas kernel path. (The single layer isn't a
-    # stacked scan group, so the trained precisions are kept verbatim —
-    # to_serve's "auto" rebudget only touches stacked leaves.)
+    # Deploy: pack + run the packed forward on the Pallas kernel backend
+    # ("pallas" negotiates mosaic on TPU, interpret elsewhere — DESIGN.md
+    # §11). (The single layer isn't a stacked scan group, so the trained
+    # precisions are kept verbatim — to_serve's "auto" rebudget only
+    # touches stacked leaves.)
     served = soniq.to_serve(qat)
-    y_kernel = ops.packed_matmul(x, served.params, interpret=True)
+    with soniq.use_backend("pallas"):
+        y_kernel = soniq.apply(served, x)
     y_qat = soniq.apply(qat, x)
     err = float(jnp.max(jnp.abs(y_kernel - y_qat)))
     nbytes = sum(int(np.prod(served.params[k].shape))

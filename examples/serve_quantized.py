@@ -6,7 +6,9 @@ Trains a tiny LM briefly (QAT), converts to packed 1/2/4-bit weights, then
 streams a mixed-length request set through the request-level
 ``DecodeEngine`` (admission queue, slot reuse, chunked prefill —
 DESIGN.md §10); reports the packed-size win and per-request completions as
-they finish.
+they finish. Pass a kernel-backend name (``xla_ref``, ``pallas``,
+``pallas_interpret`` — DESIGN.md §11) as the first argument to pick the
+engine's kernels; default is auto-negotiation.
 """
 import sys
 
@@ -37,9 +39,12 @@ def main():
 
     # 2 slots serving 4 requests: the engine reuses slots as requests
     # finish instead of padding everyone to the longest prompt.
+    backend = sys.argv[1] if len(sys.argv) > 1 else None
     eng = soniq.DecodeEngine(
         params, cfg, soniq.EngineConfig(max_batch=2, cache_len=128,
-                                        prefill_chunk=4))
+                                        prefill_chunk=4, backend=backend))
+    print(f"kernel backend: {soniq.current_backend().name}"
+          if backend is None else f"kernel backend: {backend}")
     fp_bytes = sum(v.size * 4 for v in jax.tree.leaves(params)
                    if hasattr(v, "size"))
     q_bytes = soniq.packed_bytes(eng.params)

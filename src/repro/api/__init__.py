@@ -11,9 +11,14 @@
 Typed phases (``soniq.Phase.FP/NOISE/QAT/SERVE``) replace the old
 string-mode branching; the lifecycle transforms are explicit, composable
 pytree functions (see ``repro.api.transforms``); serving runs through
-``soniq.DecodeEngine``. DESIGN.md §9 has the full API reference and the
-migration table from the legacy entry points.
+``soniq.DecodeEngine``. The quantized hot-path ops execute on a pluggable
+kernel backend — ``soniq.QuantConfig(backend="pallas")``, the
+``SONIQ_BACKEND`` env var, or a scoped ``soniq.use_backend("...")``
+context (see ``repro.backend`` and DESIGN.md §11). DESIGN.md §9 has the
+full API reference and the migration table from the legacy entry points.
 """
+from repro.backend import (available as available_backends,    # noqa: F401
+                           current_backend, use_backend)
 from repro.core.noise import bit_penalty                       # noqa: F401
 from repro.core.qtypes import (ALLOWED_BITS, BLOCK_SIZE,       # noqa: F401
                                GROUP_SIZE, GROUPS_PER_BLOCK, FP32, P4, P8,
@@ -40,6 +45,8 @@ __all__ = [
     "convert_linear", "convert_tree", "tree_map_layers",
     # losses / reports
     "bit_penalty", "bit_penalty_of_params", "average_bpp",
+    # kernel backends
+    "use_backend", "current_backend", "available_backends",
     # serving (lazy — see __getattr__)
     "DecodeEngine", "LockstepEngine", "EngineConfig", "Request",
     "Completion", "Scheduler", "packed_bytes", "transforms",

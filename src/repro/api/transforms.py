@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pack as pack_lib
+from repro.backend import registry as backend_registry
 from repro.core import patterns as patterns_lib
 from repro.core import quant
 from repro.core import schedule as schedule_lib
@@ -196,8 +196,11 @@ def pack_linear(params: Dict, qcfg: QuantConfig) -> Dict:
     else:
         scales = np.asarray(quant.per_group_weight_scale(
             jnp.asarray(w_sorted), g))
-    packed = pack_lib.quantize_pack_weight(jnp.asarray(w_sorted),
-                                           pbits_sorted, scales, g)
+    # Deploy-time packing runs on the configured kernel backend (fused
+    # quantize+pack on Pallas; jnp on xla_ref — identical uint8 codes).
+    backend = backend_registry.resolve(qcfg.backend_name)
+    packed = backend.quantize_pack_mixed(jnp.asarray(w_sorted),
+                                         pbits_sorted, scales, g)
     out = {
         "w4": packed["w4"], "w2": packed["w2"], "w1": packed["w1"],
         "perm": jnp.asarray(perm, jnp.int32),

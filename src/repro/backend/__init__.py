@@ -1,0 +1,33 @@
+"""Pluggable kernel-backend dispatch for the SONIQ hot paths (DESIGN.md
+§11).
+
+    from repro.backend import registry
+    registry.resolve()                  # negotiated default
+    registry.resolve("pallas")          # best Pallas flavor here
+    with registry.use_backend("pallas_interpret"):
+        ...                             # scoped (trace-time) override
+
+Backends implement the :class:`~repro.backend.base.Backend` protocol
+(packed_matmul / packed_segment_matmul / quantize_pack / noise_inject /
+fake_quant) and register at import time:
+
+    xla_ref           pure jnp/XLA — reference semantics, CPU default
+    pallas_interpret  Pallas kernels under the interpreter (any platform)
+    pallas_mosaic     Pallas kernels compiled via Mosaic (TPU only)
+
+Selection precedence: ``use_backend`` context > ``QuantConfig.backend`` >
+``SONIQ_BACKEND`` env > negotiation by priority/availability. Explicit
+names never fall back silently.
+"""
+from . import autotune                              # noqa: F401
+from .base import OPS, Backend, BackendUnavailable  # noqa: F401
+from .registry import (available, current_backend,  # noqa: F401
+                       get, names, register, resolve, use_backend)
+
+# Importing the implementation modules registers the built-in backends.
+from . import xla_ref as _xla_ref                   # noqa: F401,E402
+from . import pallas as _pallas                     # noqa: F401,E402
+
+__all__ = ["Backend", "BackendUnavailable", "OPS", "autotune", "available",
+           "current_backend", "get", "names", "register", "resolve",
+           "use_backend"]

@@ -1,0 +1,180 @@
+"""Block-size autotuner for the Pallas backends.
+
+Cache model
+-----------
+A JSON file mapping a string key
+
+    "<op>|shape=MxKxN|p=<bits>|dtype=<name>|platform=<jax backend>"
+
+to ``{"blocks": {"block_m": ..., ...}, "us": <best measured microseconds>,
+"candidates": <n tried>}``. Lookup (:func:`lookup`) is a pure dict read —
+safe at jit-trace time, where timing is impossible — and returns ``{}`` on
+a miss so callers fall back to the kernels' static defaults.
+
+Measurement (:func:`autotune_op`) is explicit and happens *outside* any
+trace: benchmarks (``runtime_proxy.py --autotune``) or an operator's
+one-off script time each candidate with ``block_until_ready`` and persist
+the winner. The cache location is ``$SONIQ_AUTOTUNE_CACHE`` (a file path)
+or ``~/.cache/soniq/autotune.json``; nothing is ever written unless a
+measurement runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+ENV_CACHE = "SONIQ_AUTOTUNE_CACHE"
+
+# Static defaults shipped with the kernels (see kernels/*.py headers for
+# the VMEM budget math behind them).
+DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
+    "packed_segment_matmul": {"block_m": 256, "block_n": 128,
+                              "block_k": 256},
+    "quantize_pack": {"block_k": 256, "block_n": 256},
+    "noise_inject": {"block_k": 256, "block_n": 256},
+}
+
+_CACHE: Optional[Dict[str, Dict]] = None
+_CACHE_FILE: Optional[str] = None
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get(ENV_CACHE)
+                or Path.home() / ".cache" / "soniq" / "autotune.json")
+
+
+def cache_key(op: str, shape: Sequence[int], p: int, dtype,
+              platform: Optional[str] = None, backend: str = "") -> str:
+    """``backend`` is the backend *name* (pallas_interpret vs
+    pallas_mosaic time very differently yet share a jax platform — they
+    must not share cache entries)."""
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    dims = "x".join(str(int(d)) for d in shape)
+    key = f"{op}|shape={dims}|p={int(p)}|dtype={dtype}|platform={platform}"
+    return f"{key}|backend={backend}" if backend else key
+
+
+def _load() -> Dict[str, Dict]:
+    global _CACHE, _CACHE_FILE
+    path = str(cache_path())
+    if _CACHE is None or _CACHE_FILE != path:
+        _CACHE_FILE = path
+        try:
+            with open(path) as f:
+                _CACHE = json.load(f)
+        except (OSError, ValueError):
+            _CACHE = {}
+    return _CACHE
+
+
+def invalidate() -> None:
+    """Drop the in-memory cache (next lookup re-reads the file)."""
+    global _CACHE
+    _CACHE = None
+
+
+def lookup(op: str, *, shape: Sequence[int], p: int, dtype,
+           platform: Optional[str] = None,
+           backend: str = "") -> Dict[str, int]:
+    """Cached block config for this (op, shape, dtype, platform, backend),
+    or ``{}`` (use kernel defaults). Trace-time safe."""
+    entry = _load().get(cache_key(op, shape, p, dtype, platform, backend))
+    if not entry:
+        return {}
+    return {k: int(v) for k, v in entry["blocks"].items()}
+
+
+def save_entry(key: str, blocks: Dict[str, int], us: float,
+               candidates: int) -> None:
+    cache = dict(_load())
+    cache[key] = {"blocks": blocks, "us": round(float(us), 2),
+                  "candidates": int(candidates)}
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    invalidate()
+
+
+def _divisor_candidates(total: int, multiple: int,
+                        wants: Sequence[int]) -> List[int]:
+    from repro.kernels.packed_matmul import fit_block
+    out: List[int] = []
+    for w in wants:
+        d = fit_block(total, w, multiple)
+        if d not in out:
+            out.append(d)
+    return out
+
+
+def candidates_for(op: str, shape: Sequence[int]) -> List[Dict[str, int]]:
+    """A small grid of legal block configs for ``op`` at ``shape``
+    (divisor-snapped, so every candidate tiles exactly)."""
+    from repro.core.qtypes import GROUP_SIZE
+    if op == "packed_segment_matmul":
+        m, kp, n = shape
+        return [{"block_m": bm, "block_n": bn, "block_k": bk}
+                for bm in _divisor_candidates(m, 1, (64, 128, 256, 512))
+                for bn in _divisor_candidates(n, 1, (128, 256))
+                for bk in _divisor_candidates(kp, GROUP_SIZE,
+                                              (128, 256, 512))]
+    k, n = shape
+    return [{"block_k": bk, "block_n": bn}
+            for bk in _divisor_candidates(k, GROUP_SIZE, (128, 256, 512))
+            for bn in _divisor_candidates(n, 1, (128, 256, 512))]
+
+
+def measure(fn, iters: int = 3) -> float:
+    """Best-of-``iters`` wall time of ``fn()`` in microseconds (first call
+    excluded — it compiles)."""
+    import jax
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def autotune_op(call, op: str, *, shape: Sequence[int], p: int, dtype,
+                candidates: Optional[List[Dict[str, int]]] = None,
+                iters: int = 3, backend: str = "") -> Dict[str, int]:
+    """Time ``call(**blocks)`` over the candidate grid, persist the winner
+    under this (op, shape, dtype, platform, backend) key, and return its
+    blocks.
+
+    ``call`` must run the real op at the real shape (closures over the
+    operands); it is invoked outside any trace.
+    """
+    cands = candidates if candidates is not None \
+        else candidates_for(op, shape)
+    if not cands:
+        return {}
+    best_blocks, best_us, last_err = None, float("inf"), None
+    for blocks in cands:
+        try:
+            us = measure(lambda: call(**blocks), iters=iters)
+        except Exception as e:         # illegal tiling for this shape
+            last_err = e
+            continue
+        if us < best_us:
+            best_blocks, best_us = blocks, us
+    if best_blocks is None:
+        # Every candidate failing means the kernel itself is broken at
+        # this shape, not a tiling quirk — don't pretend tuning succeeded.
+        print(f"[autotune] {op} shape={tuple(shape)}: all {len(cands)} "
+              f"candidates failed (last: {last_err!r}); using defaults",
+              file=sys.stderr)
+        return {}
+    save_entry(cache_key(op, shape, p, dtype, backend=backend),
+               best_blocks, best_us, len(cands))
+    return best_blocks

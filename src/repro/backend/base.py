@@ -1,0 +1,280 @@
+"""The kernel-backend protocol (DESIGN.md §11).
+
+A :class:`Backend` owns the implementations of the five SONIQ hot-path
+ops — the operations every lifecycle phase's forward rule is built from:
+
+    packed_segment_matmul   x @ unpack_dequant(wp) for one uniform-p segment
+    packed_matmul           full mixed [K4|K2|K1] serve-mode linear
+    quantize_pack           SMOL quantize + bit-pack one uniform-p weight
+    noise_inject            Phase-I fused perturbation  clip(w + σ(s)·ε)
+    fake_quant              straight-through quantize-dequantize (QAT)
+
+Backends register with :mod:`repro.backend.registry`; the phase rules in
+``repro.core.smol`` resolve one at trace time (``QuantConfig.backend`` /
+``SONIQ_BACKEND`` / ``soniq.use_backend``) and never touch a kernel module
+directly — the dependency points from backend implementations *down* into
+``repro.kernels``/``repro.core``, not from core up into kernels.
+
+Two template methods keep cross-backend numerics aligned:
+
+* :meth:`Backend.packed_matmul` — the shared mixed-precision driver:
+  channel permutation, activation scaling per ``QuantConfig.act_scale_mode``
+  (per_token / per_tensor / none), one ``fake_quant`` over the full K, then
+  one ``packed_segment_matmul`` per non-empty segment
+  (``core.pack.iter_packed_segments``) accumulated in fp32. Backends only
+  override the per-segment GEMM, so greedy decode is token-identical
+  across backends at fp32 (pinned by ``tests/test_backend_dispatch.py``).
+* :meth:`Backend.noise_inject` — wraps the backend's forward kernel in a
+  shared ``custom_vjp``: ε is a counter-based hash of (element index, seed)
+  (``kernels.prng``), so the backward pass recomputes it in jnp and every
+  backend gets exact Phase-I gradients even when its forward is a
+  non-differentiable Pallas call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as pack_lib
+from repro.core import quant
+from repro.core.qtypes import GROUP_SIZE
+
+# The op vocabulary of the protocol (capability negotiation keys).
+OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
+                        "quantize_pack", "noise_inject", "fake_quant")
+
+# Where each op's backend-specific implementation actually lives (defaults
+# to the op name itself): noise_inject's public entry point is the shared
+# custom-VJP wrapper, so its capability hook is the forward method.
+_OP_IMPL_HOOK = {"noise_inject": "_noise_inject_fwd"}
+
+
+class BackendUnavailable(RuntimeError):
+    """An explicitly selected backend cannot run here (wrong platform,
+    missing toolchain). Explicit selection never falls back silently —
+    callers that want negotiation pass no name at all."""
+
+
+def act_scale(x, act_scale_mode: str):
+    """Dynamic activation scale per the config policy. ``per_token``
+    reduces over the last dim only (row-independent — what continuous
+    batching requires); ``per_tensor`` over the whole tensor; ``none`` is
+    the paper-faithful pre-scaled setting."""
+    if act_scale_mode == "none":
+        return jnp.asarray(1.0, jnp.float32)
+    if act_scale_mode == "per_token":
+        return quant.abs_max_scale(x, axis=-1).astype(jnp.float32)
+    return quant.abs_max_scale(x).astype(jnp.float32)
+
+
+def hash_eps(shape: Tuple[int, ...], seed):
+    """The shared Phase-I noise draw: ε ~ U(-1, 1) from the counter-based
+    hash of the global element index — identical in every backend (and on
+    TPU vs interpret), which is what makes noise_inject backend-exact."""
+    from repro.kernels import prng
+    k, n = shape
+    idx = (jnp.arange(k, dtype=jnp.uint32)[:, None] * jnp.uint32(n)
+           + jnp.arange(n, dtype=jnp.uint32)[None, :])
+    return prng.uniform_pm1(idx, seed)
+
+
+# --------------------------------------------------------------------------
+# noise_inject: shared custom_vjp over the backend-specific forward.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 4, 5))
+def _noise_inject(backend, w, s, seed, group_size, blocks):
+    return backend._noise_inject_fwd(w, s, seed, group_size, dict(blocks))
+
+
+def _noise_inject_fwd(backend, w, s, seed, group_size, blocks):
+    out = backend._noise_inject_fwd(w, s, seed, group_size, dict(blocks))
+    return out, (w, s, seed)
+
+
+def _noise_inject_bwd(backend, group_size, blocks, res, g):
+    w, s, seed = res
+    k = w.shape[0]
+    sig_g = jax.nn.sigmoid(jnp.asarray(s, jnp.float32))
+    sig = jnp.repeat(sig_g, group_size, total_repeat_length=k)[:, None]
+    eps = hash_eps(w.shape, seed)
+    z = jnp.asarray(w, jnp.float32) + sig * eps
+    lim = 2.0 - sig
+    inside = jnp.abs(z) <= lim
+    g32 = jnp.asarray(g, jnp.float32)
+    dw = jnp.where(inside, g32, 0.0).astype(w.dtype)
+    # ∂out/∂σ: ε inside the clip; at the clamp the limit ±(2-σ) itself
+    # moves with σ, d(±(2-σ))/dσ = ∓1. Chain through σ'(s) = σ(1-σ) and
+    # sum each group's K×N block.
+    dsig_elem = jnp.where(inside, eps, -jnp.sign(z))
+    per_k = jnp.sum(g32 * dsig_elem, axis=tuple(range(1, w.ndim)))
+    per_group = per_k.reshape(sig_g.shape[0], group_size).sum(axis=1)
+    ds = (per_group * sig_g * (1.0 - sig_g)).astype(
+        jnp.asarray(s).dtype)
+    dseed = np.zeros(np.shape(seed), dtype=jax.dtypes.float0)
+    return dw, ds, dseed
+
+
+_noise_inject.defvjp(_noise_inject_fwd, _noise_inject_bwd)
+
+
+def noise_inject_jnp(w, s, seed, group_size: int = GROUP_SIZE):
+    """Reference forward (pure jnp, counter-hash ε): clip(w + σ(s)·ε,
+    ±(2-σ)). Matches ``kernels.ref.noise_inject_ref`` bit-for-bit."""
+    w32 = jnp.asarray(w, jnp.float32)
+    k = w.shape[0]
+    sig = jnp.repeat(jax.nn.sigmoid(jnp.asarray(s, jnp.float32)),
+                     group_size, total_repeat_length=k)[:, None]
+    eps = hash_eps(w.shape, seed)
+    out = w32 + sig * eps
+    return jnp.clip(out, -(2.0 - sig), 2.0 - sig).astype(w.dtype)
+
+
+class Backend:
+    """Base class / protocol for kernel backends.
+
+    Subclasses set ``name``/``priority``, implement the per-segment ops
+    they accelerate, and inherit the shared drivers. ``priority`` orders
+    auto-negotiation (highest available wins); ``is_available`` gates it.
+    """
+
+    name: str = "abstract"
+    priority: int = 0
+
+    # ---------------------------------------------------- availability ----
+    def is_available(self) -> bool:
+        return True
+
+    def why_unavailable(self) -> str:
+        return "available"
+
+    def supports(self, op: str) -> bool:
+        """Capability probe: does this backend carry its own implementation
+        of ``op``, vs inheriting the shared/reference one? (Ops route
+        through template hooks where the shared wrapper must stay — e.g.
+        noise_inject's custom VJP — so the probe checks the hook.)"""
+        assert op in OPS, op
+        attr = _OP_IMPL_HOOK.get(op, op)
+        return getattr(type(self), attr, None) is not getattr(
+            Backend, attr, None)
+
+    # ------------------------------------------------------ primitive ops --
+    def packed_segment_matmul(self, x, wp, scales=None, *, p: int,
+                              act_quant: bool = False,
+                              group_size: int = GROUP_SIZE, **blocks):
+        """x [M, Kp] @ unpack_dequant(wp [Kp*p//8, N]) -> [M, N] f32.
+        ``scales``: per-group [Kp//group_size] f32 or None. ``act_quant``
+        snaps x (already in scale units) to the p-bit grid first."""
+        raise NotImplementedError(self.name)
+
+    def quantize_pack(self, w, scales=None, *, p: int,
+                      group_size: int = GROUP_SIZE, **blocks):
+        """w [K, N] f32 -> packed uint8 [K*p//8, N] SMOL codes."""
+        raise NotImplementedError(self.name)
+
+    def fake_quant(self, x, pbits, scale, group_size: int = GROUP_SIZE):
+        """Clipped-STE quantize-dequantize along the last dim with
+        per-group precisions. Shared jnp/custom_vjp implementation — the
+        QAT backward must stay a custom VJP, so backends that want to
+        accelerate the forward override ``_fake_quant_fwd`` territory in
+        ``core.quant`` rather than this entry point."""
+        return quant.fake_quant(x, pbits, scale, group_size)
+
+    def noise_inject(self, w, s, seed, *, group_size: int = GROUP_SIZE,
+                     **blocks):
+        """Phase-I fused perturbation, differentiable in (w, s) via the
+        shared custom VJP (ε recomputed from the hash in the backward)."""
+        return _noise_inject(self, w, s, jnp.asarray(seed, jnp.uint32),
+                             group_size, tuple(sorted(blocks.items())))
+
+    def _noise_inject_fwd(self, w, s, seed, group_size: int, blocks: Dict):
+        """Forward-only noise kernel (wrapped by the custom VJP)."""
+        return noise_inject_jnp(w, s, seed, group_size)
+
+    # ------------------------------------------------- shared drivers ------
+    def packed_matmul(self, serve_params: Dict, x, qcfg, **blocks):
+        """Full serve-mode SmolLinear over a packed leaf: channel perm,
+        activation quantization per ``qcfg.act_scale_mode``, one
+        per-segment GEMM per non-empty [K4|K2|K1] segment, fp32
+        accumulation, bias, cast back to x.dtype.
+
+        The driver is shared so every backend applies *identical*
+        activation scaling (the whole-batch-abs-max magnitude leak the
+        old kernel wrapper had cannot reappear per-backend) and identical
+        segment/accumulation order.
+        """
+        bufs = {name: serve_params[name] for name, _p, _v in
+                pack_lib.SEGMENTS}
+        k = sum(serve_params[name].shape[0] * v
+                for name, _p, v in pack_lib.SEGMENTS)
+        g = qcfg.eff_group_size(k)
+        x = jnp.take(x, serve_params["perm"], axis=-1)
+        if qcfg.quantize_activations:
+            pbits = serve_params.get("pbits_sorted")
+            if pbits is None:
+                # Legacy packed dicts may omit the metadata leaf; the
+                # sorted per-group precisions are fully determined by the
+                # carrier shapes.
+                pbits = jnp.asarray(np.concatenate(
+                    [np.full(ng, p, np.float32) for _n, p, _o, _kp, _go, ng
+                     in pack_lib.iter_packed_segments(bufs, g)]))
+            sx = act_scale(x, qcfg.act_scale_mode)
+            x = self.fake_quant(x, pbits.astype(jnp.float32), sx, g)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, k)
+        wscale = serve_params.get("wscale")
+        n = max(serve_params[name].shape[1]
+                for name, _p, _v in pack_lib.SEGMENTS)
+        y = jnp.zeros((x2.shape[0], n), jnp.float32)
+        for name, p, off, kp, goff, ng in pack_lib.iter_packed_segments(
+                bufs, g):
+            seg_scales = None if wscale is None else \
+                jax.lax.dynamic_slice_in_dim(wscale, goff, ng)
+            y = y + self.packed_segment_matmul(
+                x2[:, off:off + kp], serve_params[name], seg_scales, p=p,
+                act_quant=False, group_size=g, **blocks)
+        b = serve_params.get("b")
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y.reshape(lead + (n,)).astype(x.dtype)
+
+    def quantize_pack_mixed(self, w, pbits, scales=None,
+                            group_size: int = GROUP_SIZE) -> Dict:
+        """Mixed-precision deploy packing: quantize + bit-pack each
+        uniform-precision segment of a [K, N] weight whose sorted
+        per-group ``pbits`` define the [K4|K2|K1] split. Same contract as
+        ``core.pack.quantize_pack_weight`` (which remains the pure-jnp
+        reference); the per-segment packing runs through this backend's
+        ``quantize_pack`` op."""
+        w = jnp.asarray(w, jnp.float32)
+        k, n = w.shape
+        pbits = np.asarray(pbits)
+        assert pbits.ndim == 1 and pbits.shape[0] * group_size == k, \
+            (pbits.shape, k, group_size)
+        order = {4: 0, 2: 1, 1: 2}
+        ranks = np.array([order[int(p)] for p in pbits])
+        assert np.all(np.diff(ranks) >= 0), "pbits must be sorted 4 -> 2 -> 1"
+        segs = tuple(int((pbits == p).sum()) * group_size for p in (4, 2, 1))
+        if scales is not None:
+            scales = jnp.asarray(scales, jnp.float32)
+        out = {"segments": segs, "scales": scales, "n": n,
+               "group_size": group_size}
+        off = goff = 0
+        for (name, p, _vpb), kp in zip(pack_lib.SEGMENTS, segs):
+            if kp == 0:
+                out[name] = jnp.zeros((0, n), jnp.uint8)
+                continue
+            ng = max(kp // group_size, 1)
+            seg_scales = None if scales is None else scales[goff:goff + ng]
+            out[name] = self.quantize_pack(w[off:off + kp], seg_scales,
+                                           p=p, group_size=group_size)
+            off += kp
+            goff += ng
+        return out
+
+    def __repr__(self) -> str:
+        return f"<Backend {self.name}>"

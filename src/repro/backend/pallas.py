@@ -1,0 +1,115 @@
+"""``pallas_interpret`` / ``pallas_mosaic`` — the Pallas kernel backends.
+
+Both route the per-segment ops through the fused TPU kernels in
+``repro.kernels`` (in-register unpack + dequant + MXU GEMM, fused SMOL
+quantize+pack, in-kernel-PRNG noise). ``pallas_interpret`` runs them under
+the Pallas interpreter (any platform — the CI parity leg);
+``pallas_mosaic`` compiles through Mosaic and is only available on a real
+TPU. Selection between them is a registry concern ("pallas" alias);
+``interpret`` is an implementation detail that no public API exposes.
+
+Geometry the kernels cannot express (a K narrower than the 16-channel
+group, carrier rows that do not tile) falls back per-call to the jnp
+reference math — which is numerically *identical* for these ops (integer
+pack outputs, hash-exact noise), so the fallback is invisible; it is a
+shape-coverage escape hatch, not a different answer.
+
+Block shapes come from :mod:`repro.backend.autotune`: an on-disk cache
+keyed by (op, shape, dtype, platform), falling back to the static defaults
+the kernels shipped with. Lookup is trace-time-safe (no timing inside a
+trace); measurement is explicit (``autotune.autotune_op`` /
+``benchmarks/runtime_proxy.py --autotune``).
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+
+from repro.core.qtypes import GROUP_SIZE
+
+# The kernels package re-exports the op *functions* under the same names
+# as their home modules (kernels.packed_matmul is a function attribute of
+# the package), so plain `from repro.kernels import packed_matmul` would
+# grab the function; import the modules explicitly.
+_pm = importlib.import_module("repro.kernels.packed_matmul")
+_qp = importlib.import_module("repro.kernels.quant_pack")
+_ni = importlib.import_module("repro.kernels.noise_inject")
+
+from . import autotune
+from .base import Backend
+from .registry import register
+from .xla_ref import XLA_REF as _REF   # per-call geometry fallback
+
+
+class PallasBackend(Backend):
+    """Shared Pallas plumbing; ``interpret`` picks the execution mode."""
+
+    interpret: bool = True
+
+    def _blocks(self, op: str, shape, p, dtype, blocks):
+        """Explicit caller blocks win; else the autotune cache; else the
+        kernel defaults (autotune returns {} on a miss)."""
+        if blocks:
+            return blocks
+        return autotune.lookup(op, shape=shape, p=p, dtype=dtype,
+                               backend=self.name)
+
+    def packed_segment_matmul(self, x, wp, scales=None, *, p: int,
+                              act_quant: bool = False,
+                              group_size: int = GROUP_SIZE, **blocks):
+        if group_size != GROUP_SIZE or x.ndim != 2 \
+                or x.shape[1] % GROUP_SIZE:
+            return _REF.packed_segment_matmul(
+                x, wp, scales, p=p, act_quant=act_quant,
+                group_size=group_size)
+        m, kp = x.shape
+        blocks = self._blocks("packed_segment_matmul", (m, kp, wp.shape[1]),
+                              p, x.dtype, blocks)
+        return _pm.packed_segment_matmul(x, wp, scales, p=p,
+                                         act_quant=act_quant,
+                                         interpret=self.interpret, **blocks)
+
+    def quantize_pack(self, w, scales=None, *, p: int,
+                      group_size: int = GROUP_SIZE, **blocks):
+        if group_size != GROUP_SIZE or w.ndim != 2 \
+                or w.shape[0] % GROUP_SIZE:
+            return _REF.quantize_pack(w, scales, p=p, group_size=group_size)
+        blocks = self._blocks("quantize_pack", tuple(w.shape), p, w.dtype,
+                              blocks)
+        return _qp.quantize_pack(w, scales, p=p, interpret=self.interpret,
+                                 **blocks)
+
+    def _noise_inject_fwd(self, w, s, seed, group_size, blocks):
+        if group_size != GROUP_SIZE or w.ndim != 2 \
+                or w.shape[0] % GROUP_SIZE:
+            return super()._noise_inject_fwd(w, s, seed, group_size, blocks)
+        blocks = self._blocks("noise_inject", tuple(w.shape), 0, w.dtype,
+                              blocks)
+        return _ni.noise_inject(w, s, seed, interpret=self.interpret,
+                                **blocks)
+
+
+class PallasInterpretBackend(PallasBackend):
+
+    name = "pallas_interpret"
+    priority = 10                      # correct everywhere, fast nowhere
+    interpret = True
+
+
+class PallasMosaicBackend(PallasBackend):
+
+    name = "pallas_mosaic"
+    priority = 100                     # the point of the whole exercise
+    interpret = False
+
+    def is_available(self) -> bool:
+        return jax.default_backend() == "tpu"
+
+    def why_unavailable(self) -> str:
+        return (f"requires a TPU (jax default backend is "
+                f"{jax.default_backend()!r})")
+
+
+PALLAS_INTERPRET = register(PallasInterpretBackend())
+PALLAS_MOSAIC = register(PallasMosaicBackend())

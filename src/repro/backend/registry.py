@@ -1,0 +1,130 @@
+"""Backend registry: registration, capability negotiation, selection.
+
+Selection precedence at each dispatch site (``resolve(name)``):
+
+1. an active ``use_backend(...)`` context (innermost wins),
+2. the explicit ``name`` argument (``QuantConfig.backend``),
+3. the ``SONIQ_BACKEND`` environment variable,
+4. auto-negotiation: the highest-``priority`` registered backend whose
+   ``is_available()`` is True.
+
+Explicit selection (1-3) is strict: naming a backend that is not
+registered or not available on this platform raises
+:class:`~repro.backend.base.BackendUnavailable` — there is no silent
+fallback (the CI backend matrix depends on that). Aliases ("pallas",
+"auto") are the negotiated exceptions: they expand to an ordered candidate
+list and pick the first available, which is the documented behavior.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, List, Optional, Tuple
+
+from .base import Backend, BackendUnavailable
+
+ENV_VAR = "SONIQ_BACKEND"
+
+_REGISTRY: Dict[str, Backend] = {}
+_STACK: List[str] = []          # use_backend() context overrides, innermost last
+
+# Alias -> ordered candidates; the first available one is used. "pallas"
+# lets configs ask for "the real kernels" without hard-coding the platform
+# flavor (mosaic on TPU, interpret elsewhere).
+ALIASES: Dict[str, Tuple[str, ...]] = {
+    "pallas": ("pallas_mosaic", "pallas_interpret"),
+}
+
+
+def register(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Add a backend to the registry (import-time side effect of the
+    implementation modules; also the extension point for out-of-tree
+    backends, e.g. a future Triton/GPU one)."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    assert backend.name not in ALIASES and backend.name != "auto", \
+        f"{backend.name!r} collides with an alias"
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def names() -> Tuple[str, ...]:
+    """All registered backend names (whether or not available here)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Backend:
+    """Look up a registered backend by exact name (no availability check)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise BackendUnavailable(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)} "
+            f"(aliases: {sorted(ALIASES)})") from None
+
+
+def available() -> List[str]:
+    """Names of backends that can run on this platform, best first."""
+    avail = [b for b in _REGISTRY.values() if b.is_available()]
+    return [b.name for b in
+            sorted(avail, key=lambda b: -b.priority)]
+
+
+def _strict(name: str) -> Backend:
+    """Resolve an explicit name/alias; raise rather than fall back."""
+    if name in ALIASES:
+        for cand in ALIASES[name]:
+            b = _REGISTRY.get(cand)
+            if b is not None and b.is_available():
+                return b
+        raise BackendUnavailable(
+            f"no candidate of alias {name!r} is available here: "
+            + "; ".join(f"{c}: {get(c).why_unavailable()}"
+                        for c in ALIASES[name] if c in _REGISTRY))
+    b = get(name)
+    if not b.is_available():
+        raise BackendUnavailable(
+            f"backend {name!r} is registered but not available on this "
+            f"platform: {b.why_unavailable()} (explicit selection never "
+            f"falls back; unset {ENV_VAR} / QuantConfig.backend to "
+            "negotiate)")
+    return b
+
+
+def resolve(name: Optional[str] = None) -> Backend:
+    """Select the backend for a dispatch site. See module docstring for
+    precedence. Called at trace time — the choice is baked into each jit
+    trace, so switch backends via config (or rebuild the jitted fn), not
+    by flipping a context around an already-compiled call."""
+    if _STACK:
+        return _strict(_STACK[-1])
+    if name is not None:
+        return _strict(name)
+    env = os.environ.get(ENV_VAR, "").strip()
+    if env:
+        return _strict(env)
+    order = available()
+    if not order:
+        raise BackendUnavailable(
+            "no kernel backend is available (registry: "
+            f"{sorted(_REGISTRY)})")
+    return _REGISTRY[order[0]]
+
+
+def current_backend() -> Backend:
+    """The backend an unpinned dispatch would use right now."""
+    return resolve(None)
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped override: every dispatch *traced* inside the context uses
+    ``name`` (strict — unavailable raises on entry). Overrides
+    ``QuantConfig.backend``; does not retroactively affect functions
+    already jit-compiled outside the context."""
+    _strict(name)                      # validate eagerly
+    _STACK.append(name)
+    try:
+        yield _strict(name)
+    finally:
+        _STACK.pop()

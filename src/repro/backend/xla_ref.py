@@ -1,0 +1,64 @@
+"""``xla_ref`` — the pure-jnp/XLA reference backend.
+
+Every op is ordinary jnp lowered by XLA: correct on any platform, the
+parity oracle for the accelerated backends, and the fastest choice on CPU
+(interpret-mode Pallas is an interpreter). The per-segment GEMM matches
+``kernels.ref.packed_segment_matmul_ref`` (generalized to non-16 group
+sizes so layers narrower than a group still pack), and quantize/noise
+reuse the same ``core.quant``/hash primitives the kernels implement, so
+cross-backend comparisons are exact for integer outputs and fp32 math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as pack_lib
+from repro.core import quant
+from repro.core.qtypes import GROUP_SIZE
+
+from .base import Backend
+from .registry import register
+
+
+class XlaRefBackend(Backend):
+
+    name = "xla_ref"
+    priority = 50                      # default everywhere off-TPU
+
+    def packed_segment_matmul(self, x, wp, scales=None, *, p: int,
+                              act_quant: bool = False,
+                              group_size: int = GROUP_SIZE, **blocks):
+        del blocks                     # block shapes are a kernel concern
+        kp = wp.shape[0] * (8 // p)
+        u = pack_lib.unpack_codes(wp, p, kp)
+        wd = quant.dequantize_int(u, p)
+        if scales is not None:
+            s_full = jnp.repeat(scales.astype(jnp.float32), group_size,
+                                total_repeat_length=kp)
+            wd = wd * s_full[:, None]
+        xs = jnp.asarray(x, jnp.float32)
+        if act_quant:
+            xs = quant.snap_to_grid(xs, p)
+        return jax.lax.dot_general(
+            xs, wd.astype(jnp.float32),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    def quantize_pack(self, w, scales=None, *, p: int,
+                      group_size: int = GROUP_SIZE, **blocks):
+        del blocks
+        k = w.shape[0]
+        ws = jnp.asarray(w, jnp.float32)
+        if scales is not None:
+            s_full = jnp.repeat(scales.astype(jnp.float32), group_size,
+                                total_repeat_length=k)
+            ws = ws / s_full[:, None]
+        u = quant.quantize_to_int(ws, p).astype(jnp.uint8)
+        return pack_lib.pack_codes(u, p)
+
+    # noise_inject / fake_quant: the shared reference implementations in
+    # Backend are already pure jnp — nothing to override.
+
+
+XLA_REF = register(XlaRefBackend())

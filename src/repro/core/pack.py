@@ -12,12 +12,42 @@ buffers + the (K4, K2, K1) metadata triple (3 ints per layer, paper Obs. 4).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Iterator, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from . import quant
+
+# The canonical [K4 | K2 | K1] segment order of a packed mixed-precision
+# weight: (carrier name, precision bits, codes per carrier byte). Every
+# consumer of packed buffers (jnp dequant below, the backend matmul driver,
+# the Pallas kernels' wrappers) iterates this single tuple instead of
+# re-deriving the layout.
+SEGMENTS: Tuple[Tuple[str, int, int], ...] = (("w4", 4, 2), ("w2", 2, 4),
+                                              ("w1", 1, 8))
+
+
+def iter_packed_segments(bufs: Dict, group_size: int = 16
+                         ) -> Iterator[Tuple[str, int, int, int, int, int]]:
+    """Iterate the non-empty uniform-precision segments of packed carriers
+    ``{"w4": [K4*4//8, ...], "w2": ..., "w1": ...}`` in [K4|K2|K1] order.
+
+    Yields ``(name, p, k_off, kp, g_off, ng)`` per segment: the carrier
+    name, its precision, the segment's channel offset/length along K, and
+    its group offset/count (``kp // group_size`` groups of ``group_size``
+    channels). Empty segments are skipped — the single place the
+    skip-empty logic lives.
+    """
+    k_off = g_off = 0
+    for name, p, vals_per_byte in SEGMENTS:
+        kp = bufs[name].shape[0] * vals_per_byte
+        if kp == 0:
+            continue
+        ng = max(kp // group_size, 1)
+        yield name, p, k_off, kp, g_off, ng
+        k_off += kp
+        g_off += ng
 
 
 def pack_codes(u, p: int):
@@ -54,11 +84,8 @@ def dequant_packed_carriers(bufs: Dict, cdt, wscale=None,
     CNN conv serve forwards route through this — the grid/scale convention
     lives here once."""
     parts = []
-    for name, p, vals_per_byte in (("w4", 4, 2), ("w2", 2, 4),
-                                   ("w1", 1, 8)):
-        kp = bufs[name].shape[0] * vals_per_byte
-        if kp == 0:
-            continue
+    for name, p, _koff, kp, _goff, _ng in iter_packed_segments(
+            bufs, group_size):
         u = unpack_codes(bufs[name], p, kp).astype(cdt)
         parts.append((2.0 * u - jnp.asarray(2 ** p - 1, cdt))
                      * jnp.asarray(2.0 ** (1 - p), cdt))
@@ -103,7 +130,7 @@ def quantize_pack_weight(w, pbits, scale=None, group_size=16) -> Dict:
     out = {"segments": (k4, k2, k1), "scales": scales, "n": n,
            "group_size": group_size}
     off = 0
-    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+    for (name, p, _vpb), kp in zip(SEGMENTS, (k4, k2, k1)):
         seg = ws[off:off + kp]
         u = quant.quantize_to_int(seg, p).astype(jnp.uint8)
         out[name] = (pack_codes(u, p) if kp else
@@ -117,7 +144,7 @@ def unpack_dequantize_weight(packed: Dict):
     k4, k2, k1 = packed["segments"]
     n = packed["n"]
     parts = []
-    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
+    for (name, p, _vpb), kp in zip(SEGMENTS, (k4, k2, k1)):
         if kp == 0:
             continue
         u = unpack_codes(packed[name], p, kp)

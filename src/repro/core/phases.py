@@ -22,6 +22,12 @@ carries
 The public lifecycle transforms between phases live in
 ``repro.api.transforms`` (``soniq.to_qat`` / ``soniq.to_serve``); this
 module stays dependency-light so every core/model module can import it.
+
+The rules themselves are backend-polymorphic: each registered rule builds
+its forward from the kernel-backend ops (``repro.backend``), resolved per
+``QuantConfig`` at trace time — the phase registry here decides *what* to
+compute for a leaf, the backend registry decides *which kernels* compute
+it (DESIGN.md §11).
 """
 from __future__ import annotations
 

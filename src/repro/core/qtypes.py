@@ -67,8 +67,17 @@ class QuantConfig:
     # Layers never quantized (paper excludes first/last in practice).
     skip: Tuple[str, ...] = ("embed", "lm_head", "router", "frontend")
 
-    # Use Pallas kernels (True on TPU; the pure-jnp path is used for
-    # dry-run lowering and as the reference).
+    # Kernel backend executing the quantized hot-path ops (packed matmul,
+    # quantize+pack, noise inject, fake quant). A registry name
+    # ("xla_ref", "pallas_interpret", "pallas_mosaic"), an alias
+    # ("pallas" — the best available Pallas flavor for this platform), or
+    # None: defer to the SONIQ_BACKEND env var, else negotiate the best
+    # available backend for the platform (see repro.backend.registry).
+    backend: Optional[str] = None
+
+    # DEPRECATED — legacy boolean knob, superseded by ``backend``.
+    # use_pallas=True is interpreted as backend="pallas" when ``backend``
+    # is unset.
     use_pallas: bool = False
 
     # Weights arrive already fake-quantized (set by the hoisted-quantization
@@ -84,6 +93,17 @@ class QuantConfig:
             self.act_scale_mode
         assert abs(sum(self.mix) - 1.0) < 1e-6, self.mix
         assert self.group_size % 2 == 0
+        assert self.backend is None or isinstance(self.backend, str), \
+            self.backend  # names are validated by the registry at resolve
+
+    @property
+    def backend_name(self) -> Optional[str]:
+        """The backend selector the dispatch registry should resolve:
+        ``backend`` if set, the "pallas" alias for the legacy
+        ``use_pallas`` flag, else None (env var / auto-negotiation)."""
+        if self.backend is not None:
+            return self.backend
+        return "pallas" if self.use_pallas else None
 
     # ----------------------------------------------------------- phases ----
     @property

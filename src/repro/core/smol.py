@@ -15,6 +15,13 @@ between phases. Per-16-channel-group precisions p on the K (input/reduction)
 dim are shared by weights and activations (paper Obs. 3), segments
 [K4|K2|K1] contiguous (paper Obs. 4), fp32 accumulation (TPU adaptation of
 the paper's 16.6 fixed-point accumulator).
+
+The quantized ops inside each rule (packed matmul, fake quant, noise
+inject) execute on a pluggable kernel backend resolved from
+``QuantConfig.backend`` / ``SONIQ_BACKEND`` / ``soniq.use_backend`` via
+``repro.backend.registry`` — the serve path runs the real Pallas kernels
+when a Pallas backend is selected, and the pure-jnp ``xla_ref`` emulation
+otherwise (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -26,10 +33,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import noise as noise_lib
-from . import pack as pack_lib
 from . import quant
 from .phases import Phase
 from .qtypes import QuantConfig
+
+
+def _backend(qcfg: QuantConfig):
+    """The kernel backend this config's ops dispatch to (resolved at trace
+    time; lazy import keeps ``repro.core`` importable without pulling the
+    Pallas toolchain until a quantized op actually runs)."""
+    from repro.backend import registry
+    return registry.resolve(qcfg.backend_name)
 
 
 def num_groups(k: int, group_size: int) -> int:
@@ -96,18 +110,15 @@ def _weight_scales(w, qcfg: QuantConfig, group_size: int):
 
 
 def _act_scale(x, qcfg: QuantConfig):
-    if qcfg.act_scale_mode == "none":
-        return jnp.asarray(1.0, jnp.float32)
-    if qcfg.act_scale_mode == "per_token":
-        return quant.abs_max_scale(x, axis=-1).astype(jnp.float32)
-    return quant.abs_max_scale(x).astype(jnp.float32)
+    from repro.backend import base as backend_base
+    return backend_base.act_scale(x, qcfg.act_scale_mode)
 
 
 def _quantize_weight(w, pbits, qcfg: QuantConfig, group_size: int):
     """fake-quant W [K, N] along K with per-group precisions."""
     sw = _weight_scales(w, qcfg, group_size)                  # [K//G]
-    wq_t = quant.fake_quant(jnp.swapaxes(w, 0, 1), pbits,
-                            sw, group_size)                   # [N, K]
+    wq_t = _backend(qcfg).fake_quant(jnp.swapaxes(w, 0, 1), pbits,
+                                     sw, group_size)          # [N, K]
     return jnp.swapaxes(wq_t, 0, 1)
 
 
@@ -115,7 +126,7 @@ def _quantize_act(x, pbits, qcfg: QuantConfig, group_size: int):
     if not qcfg.quantize_activations:
         return x
     sx = _act_scale(x, qcfg)
-    return quant.fake_quant(x, pbits, sx, group_size)
+    return _backend(qcfg).fake_quant(x, pbits, sx, group_size)
 
 
 def _matmul(x, w, b=None):
@@ -160,7 +171,12 @@ def _linear_noise(params, x, qcfg, rng):
     sw = _weight_scales(w, qcfg, g) * float(quant._static_grid_max(4))
     wf = jnp.asarray(w, jnp.float32) / jnp.repeat(
         sw, g, total_repeat_length=k)[:, None]
-    wn = noise_lib.inject_weight_noise(wf, params["s"], kw, g)
+    # The weight perturbation runs on the kernel backend (fused
+    # perturb+clip with in-kernel counter-hash PRNG on Pallas; the same
+    # hash in jnp on xla_ref — bit-identical across backends, and
+    # differentiable in (w, s) via the shared custom VJP).
+    seed = jax.random.bits(kw, (), jnp.uint32)
+    wn = _backend(qcfg).noise_inject(wf, params["s"], seed, group_size=g)
     wn = (wn * jnp.repeat(sw, g, total_repeat_length=k)[:, None]
           ).astype(x.dtype)
     if qcfg.quantize_activations:
@@ -184,30 +200,15 @@ def _linear_qat(params, x, qcfg, rng):
 
 @Phase.SERVE.defrule("linear")
 def _linear_serve(params, x, qcfg, rng):
-    """Packed-weight inference path (pure-jnp emulation of the Pallas
-    kernel's arithmetic: uint8 loads -> shift/mask unpack -> affine dequant
-    -> bf16 matmul, fp32 accumulate). ``kernels.ops.packed_matmul`` is the
-    fused on-TPU version; its HLO byte traffic matches this path's."""
-    # Segment sizes are static: recover them from the packed buffer shapes.
-    k4 = params["w4"].shape[0] * 2
-    k2 = params["w2"].shape[0] * 4
-    k1 = params["w1"].shape[0] * 8
-    k = k4 + k2 + k1
-    group_size = qcfg.eff_group_size(k)
-    x = jnp.take(x, params["perm"], axis=-1)          # channel reordering
-    # Dequantize directly in the compute dtype: every SMOL grid value is
-    # exactly representable in bf16 (4 mantissa bits suffice), and the fp32
-    # intermediate would double the dequant-materialization traffic (§Perf).
-    cdt = x.dtype
-    wd = pack_lib.dequant_packed_carriers(
-        {n: params[n] for n in ("w4", "w2", "w1")}, cdt,
-        wscale=params.get("wscale"), group_size=group_size)
-    if qcfg.quantize_activations:
-        pbits = params["pbits_sorted"].astype(jnp.float32)
-        sx = _act_scale(x, qcfg)
-        x = quant.fake_quant(x, pbits, sx, group_size)
-    y = _matmul(x, wd, params.get("b"))
-    return y
+    """Packed-weight inference path. The whole op (channel perm,
+    ``act_scale_mode``-aware activation quantization, per-[K4|K2|K1]-segment
+    unpack-dequant GEMM, fp32 accumulation) is the backend's shared
+    ``packed_matmul`` driver: ``xla_ref`` runs the pure-jnp emulation of the
+    kernel arithmetic (uint8 loads -> shift/mask unpack -> affine dequant ->
+    matmul), the Pallas backends run the fused kernels. Segment order and
+    activation scaling live in the driver, so backends agree token-for-token
+    at fp32."""
+    return _backend(qcfg).packed_matmul(params, x, qcfg)
 
 
 def prequantize_tree(params, qcfg: QuantConfig, compute_dtype=jnp.bfloat16):

@@ -1,8 +1,15 @@
-"""Pallas TPU kernels for the SONIQ hot paths (validated via interpret=True).
+"""Pallas TPU kernels for the SONIQ hot paths (validated via the
+``pallas_interpret`` backend).
 
 packed_matmul — mixed 1/2/4-bit packed GEMM (the paper's vmac_Pn)
 quant_pack    — fused SMOL quantize + bit-pack
 noise_inject  — fused Phase-I perturbation with in-kernel PRNG
+
+These modules are the *implementations* behind the ``pallas_interpret`` /
+``pallas_mosaic`` backends in :mod:`repro.backend`; the hot paths reach
+them through the dispatch registry, never directly. The same-named
+function re-exports below are the DEPRECATED pre-registry wrappers
+(``kernels.ops``) kept for external callers.
 """
 from . import ops, prng, ref
 from .ops import noise_inject, packed_matmul, packed_segment_matmul, quantize_pack

@@ -1,82 +1,91 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""DEPRECATED public wrappers over the kernel ops.
 
-``interpret`` defaults to True off-TPU (this container) and False on TPU.
-Every op has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
-assert_allclose against it.
+These functions predate the backend dispatch registry
+(:mod:`repro.backend`) and remain as thin shims for external callers and
+the historical kernel tests. New code selects a backend once
+(``QuantConfig.backend`` / ``SONIQ_BACKEND`` / ``soniq.use_backend``) and
+lets the phase rules dispatch — or calls the :class:`repro.backend.base
+.Backend` methods directly.
+
+Migration of the legacy ``interpret=`` kwarg (no longer part of any
+public API — backend *names* replace it):
+
+    interpret=None   registry "pallas" alias (mosaic on TPU, interpreter
+                     elsewhere — the old ``default_interpret()`` behavior)
+    interpret=True   the "pallas_interpret" backend
+    interpret=False  the "pallas_mosaic" backend
+
+The old ``packed_matmul`` wrapper's whole-batch activation scale is now
+the driver's ``act_scale_mode="per_tensor"``; pass ``"per_token"`` for the
+row-independent scale the serve engines use (DESIGN.md §10/§11).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
-from repro.core.qtypes import GROUP_SIZE
-from . import noise_inject as _ni
-from . import packed_matmul as _pm
-from . import quant_pack as _qp
+from repro.backend import registry
+from repro.core.qtypes import QuantConfig
+
 from . import ref  # noqa: F401  (re-exported for tests/benchmarks)
 
 
 def default_interpret() -> bool:
+    """DEPRECATED — backend negotiation replaces the boolean."""
     return jax.default_backend() != "tpu"
+
+
+def _backend_for(interpret: Optional[bool], fn: str):
+    warnings.warn(
+        f"kernels.ops.{fn} is deprecated; resolve a backend via "
+        "repro.backend.registry (QuantConfig.backend / SONIQ_BACKEND / "
+        "soniq.use_backend) and call its op methods instead",
+        DeprecationWarning, stacklevel=3)
+    if interpret is None:
+        return registry.resolve("pallas")
+    return registry.get("pallas_interpret" if interpret else "pallas_mosaic")
 
 
 def packed_segment_matmul(x, wp, scales=None, *, p: int,
                           act_quant: bool = False, act_scale=None,
                           interpret: Optional[bool] = None, **blocks):
     """Uniform-precision packed GEMM; see packed_matmul.py."""
-    interpret = default_interpret() if interpret is None else interpret
+    b = _backend_for(interpret, "packed_segment_matmul")
     if act_quant and act_scale is not None:
         x = x / act_scale
-    y = _pm.packed_segment_matmul(x, wp, scales, p=p, act_quant=act_quant,
-                                  interpret=interpret, **blocks)
+    y = b.packed_segment_matmul(x, wp, scales, p=p, act_quant=act_quant,
+                                **blocks)
     if act_quant and act_scale is not None:
         y = y * act_scale
     return y
 
 
 def packed_matmul(x, serve_params: Dict, *, act_quant: bool = True,
+                  act_scale_mode: str = "per_tensor",
                   interpret: Optional[bool] = None, **blocks):
     """Full SmolLinear serve-mode matmul over the [K4|K2|K1] segments of a
-    packed serve leaf (``soniq.to_serve`` / ``repro.api.transforms
-    .pack_linear``). Drop-in for the jnp serve path."""
-    interpret = default_interpret() if interpret is None else interpret
-    x = jnp.take(x, serve_params["perm"], axis=-1)
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    k4 = serve_params["w4"].shape[0] * 2
-    k2 = serve_params["w2"].shape[0] * 4
-    k1 = serve_params["w1"].shape[0] * 8
-    scales = serve_params.get("wscale")
-    act_scale = quant.abs_max_scale(x2) if act_quant else None
-    n = max(serve_params[k].shape[1] for k in ("w4", "w2", "w1"))
-    y = jnp.zeros((x2.shape[0], n), jnp.float32)
-    off, goff = 0, 0
-    for name, p, kp in (("w4", 4, k4), ("w2", 2, k2), ("w1", 1, k1)):
-        if kp == 0:
-            continue
-        seg_scales = None if scales is None else \
-            jax.lax.dynamic_slice_in_dim(scales, goff, kp // GROUP_SIZE)
-        y = y + packed_segment_matmul(
-            x2[:, off:off + kp], serve_params[name], seg_scales, p=p,
-            act_quant=act_quant, act_scale=act_scale, interpret=interpret,
-            **blocks)
-        off += kp
-        goff += kp // GROUP_SIZE
-    if serve_params.get("b") is not None and "b" in serve_params:
-        y = y + serve_params["b"].astype(y.dtype)
-    return y.reshape(lead + (n,))
+    packed serve leaf. Drop-in for the jnp serve path; the shared backend
+    driver owns the segment iteration and activation scaling."""
+    b = _backend_for(interpret, "packed_matmul")
+    qcfg = QuantConfig(mode="serve", quantize_activations=act_quant,
+                       act_scale_mode=act_scale_mode)
+    # The historical wrapper returned the raw fp32 accumulator (its x/s
+    # division promoted bf16 inputs to f32); feed the driver f32 so its
+    # final cast back to x.dtype preserves that contract without a
+    # round-trip through the narrow dtype.
+    return b.packed_matmul(serve_params, jnp.asarray(x, jnp.float32),
+                           qcfg, **blocks)
 
 
 def quantize_pack(w, scales=None, *, p: int,
                   interpret: Optional[bool] = None, **blocks):
-    interpret = default_interpret() if interpret is None else interpret
-    return _qp.quantize_pack(w, scales, p=p, interpret=interpret, **blocks)
+    b = _backend_for(interpret, "quantize_pack")
+    return b.quantize_pack(w, scales, p=p, **blocks)
 
 
 def noise_inject(w, s, seed, *, interpret: Optional[bool] = None, **blocks):
-    interpret = default_interpret() if interpret is None else interpret
-    return _ni.noise_inject(w, s, seed, interpret=interpret, **blocks)
+    b = _backend_for(interpret, "noise_inject")
+    return b.noise_inject(w, s, seed, **blocks)

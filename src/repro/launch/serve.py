@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro import soniq
+from repro.backend import registry as backend_registry
 from repro.configs import get_config
 from repro.models import lm
 from repro.train import checkpoint as ckpt_lib
@@ -58,6 +59,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--lockstep", action="store_true",
                     help="run the fixed-batch baseline engine instead")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend for the jitted steps (xla_ref, "
+                         "pallas_interpret, pallas_mosaic, or the "
+                         "'pallas' alias; default: SONIQ_BACKEND env / "
+                         "auto-negotiation)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -73,7 +79,9 @@ def main():
     ecfg = soniq.EngineConfig(max_batch=args.max_batch,
                               cache_len=args.cache_len,
                               temperature=args.temperature,
-                              prefill_chunk=args.prefill_chunk)
+                              prefill_chunk=args.prefill_chunk,
+                              backend=args.backend)
+    print(f"kernel backend: {backend_registry.resolve(args.backend).name}")
     rng = np.random.default_rng(0)
 
     if args.lockstep:

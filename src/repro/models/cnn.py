@@ -58,7 +58,7 @@ def _quant_w_conv(w, pbits, qcfg, g):
                             .reshape(-1, cin // g, g)), axis=(0, 2))
         sw = jax.lax.stop_gradient(
             jnp.maximum(m, 1e-6) / quant._static_grid_max(4))
-    wq = quant.fake_quant(wt, pbits, sw, g)
+    wq = smol._backend(qcfg).fake_quant(wt, pbits, sw, g)
     return jnp.moveaxis(wq, -1, 2)
 
 
@@ -116,7 +116,12 @@ def conv_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
         swn = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(
             wf.reshape(wf.shape[0] // g, g, -1)), axis=(1, 2)), 1e-6))
         sfull = jnp.repeat(swn, g, total_repeat_length=wf.shape[0])[:, None]
-        wn = noise_lib.inject_weight_noise(wf / sfull, params["s"], k1, g)
+        # Same backend-dispatched perturbation as the linear noise rule
+        # (counter-hash eps, shared custom VJP) — conv and linear Phase I
+        # draw from one generator on every backend.
+        seed = jax.random.bits(k1, (), jnp.uint32)
+        wn = smol._backend(qcfg).noise_inject(wf / sfull, params["s"],
+                                              seed, group_size=g)
         wn = wn * sfull
         w = jnp.moveaxis(wn.reshape(w.shape[2], w.shape[0], w.shape[1],
                                     w.shape[3]), 0, 2)
@@ -130,7 +135,7 @@ def conv_apply(params: Dict, x, qcfg: QuantConfig, rng=None, *,
         if qcfg.quantize_activations and groups == 1:
             sx = quant.abs_max_scale(x) if qcfg.act_scale_mode != "none" \
                 else 1.0
-            x = quant.fake_quant(x, pbits, sx, g)
+            x = smol._backend(qcfg).fake_quant(x, pbits, sx, g)
 
     return jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",

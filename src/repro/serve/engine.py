@@ -68,6 +68,12 @@ class EngineConfig:
     # auto-reduced to 1 for SSM/hybrid/enc-dec archs, which need strictly
     # sequential state updates — see lm.supports_chunked_prefill).
     prefill_chunk: int = 8
+    # Kernel backend for the jitted decode/prefill steps — a registry name
+    # ("xla_ref", "pallas_interpret", "pallas_mosaic", alias "pallas") or
+    # None to keep the model config's choice / SONIQ_BACKEND / negotiation
+    # (repro.backend.registry; DESIGN.md §11). Baked into QuantConfig at
+    # engine construction, so it is jit-trace-stable.
+    backend: Optional[str] = None
 
 
 class _PackedEngine:
@@ -76,6 +82,10 @@ class _PackedEngine:
     def __init__(self, params, arch_cfg, ecfg: EngineConfig,
                  *, already_serve: bool = False):
         self.cfg = arch_cfg.with_quant_mode(Phase.SERVE)
+        if ecfg.backend is not None:
+            self.cfg = dataclasses.replace(
+                self.cfg, quant=dataclasses.replace(
+                    self.cfg.quant, backend=ecfg.backend))
         if self.cfg.quant.act_scale_mode == "per_tensor":
             # Per-tensor dynamic act scales couple batch rows; serving needs
             # every request's tokens independent of batch composition

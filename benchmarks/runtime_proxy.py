@@ -4,14 +4,17 @@ TPU roofline converts into time. Uses the real packed layouts (and checks
 the Pallas kernel agrees with its oracle on one spot shape).
 
 ``--backends`` times the packed-GEMM op on each kernel backend at the
-spot shape and appends the microseconds to ``BENCH_backend.json``;
-``--autotune`` additionally runs the block-size autotuner for the Pallas
-backends at that shape (persisting the winner in the on-disk autotune
-cache consulted by every later dispatch).
+spot shape — plus the full serve driver with the activation-quant fused
+prologue on vs the two-pass reference form (the fused-vs-unfused delta) —
+and appends the microseconds to ``BENCH_backend.json``; ``--autotune``
+additionally runs the block-size autotuner for the Pallas backends at
+that shape (persisting the winner in the on-disk autotune cache consulted
+by every later dispatch).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +78,16 @@ def _spot_operands():
     return jax.random.normal(key, (SPOT_M, SPOT_K)), pack.pack_codes(u, 4)
 
 
+def _spot_leaf():
+    """A mixed-precision packed serve leaf at the spot shape, for timing
+    the full driver (perm + act quant + segment GEMMs)."""
+    from repro.api import transforms
+    from repro.core import smol
+    qcfg = QuantConfig(mode="qat", mix=(0.5, 0.375, 0.125))
+    params = smol.linear_init(jax.random.PRNGKey(0), SPOT_K, SPOT_N, qcfg)
+    return transforms.pack_linear(params, qcfg), qcfg.mix
+
+
 def backend_sweep(backends, do_autotune: bool) -> dict:
     """Time the packed GEMM per backend at the spot shape; optionally run
     the block autotuner first (Pallas backends only — xla_ref has no block
@@ -97,9 +110,34 @@ def backend_sweep(backends, do_autotune: bool) -> dict:
         err = float(jnp.max(jnp.abs(
             call() - ref.packed_segment_matmul_ref(x, wp, None, 4))))
         entry["max_err_vs_oracle"] = err
+
+        # Driver-level fused-vs-unfused activation-quant delta: the same
+        # packed leaf through packed_matmul with the fused prologue
+        # allowed vs pinned to the two-pass reference form. Only recorded
+        # for backends that actually fuse (xla_ref would measure the same
+        # path twice and record noise as a "delta").
+        derived = f"max_err={err:.3g}"
+        if b.supports("fused_act_segment_matmul"):
+            sp, mix = _spot_leaf()
+            xa = jax.random.normal(jax.random.PRNGKey(1), (SPOT_M, SPOT_K))
+            q_fused = QuantConfig(mode="serve", mix=mix,
+                                  act_scale_mode="per_token", backend=name)
+            q_two = dataclasses.replace(q_fused, fuse_act_quant=False)
+            f_fused = jax.jit(lambda v: b.packed_matmul(sp, v, q_fused))
+            f_two = jax.jit(lambda v: b.packed_matmul(sp, v, q_two))
+            entry["act_quant_fused_us"] = round(
+                autotune.measure(lambda: f_fused(xa)), 1)
+            entry["act_quant_two_pass_us"] = round(
+                autotune.measure(lambda: f_two(xa)), 1)
+            entry["act_quant_fused_speedup"] = round(
+                entry["act_quant_two_pass_us"]
+                / max(entry["act_quant_fused_us"], 1e-9), 3)
+            derived += (f"|fused_vs_two_pass="
+                        f"{entry['act_quant_fused_speedup']:.2f}x")
+
         out[name] = entry
         _common.csv_row(f"runtime_proxy.backend.{name}", entry["us"],
-                        f"max_err={err:.3g}")
+                        derived)
     return out
 
 

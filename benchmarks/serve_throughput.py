@@ -134,16 +134,26 @@ def main(argv=None):
              else [b for b in args.backends.split(",") if b])
     sweep = {}
     for name in names:
-        eng = engine_lib.DecodeEngine(
-            params, cfg, soniq.EngineConfig(
-                max_batch=args.max_batch, cache_len=128,
-                prefill_chunk=args.prefill_chunk, backend=name))
-        list(eng.serve([Request(prompt=np.ones(5, np.int32),
-                                max_new_tokens=2, seed=0)]))  # warm jit
-        t = run_continuous(eng, reqs)
-        sweep[name] = {"tok_s": round(useful / t, 1),
-                       "seconds": round(t, 3)}
-        print(f"backend {name:>16}: {t:6.2f}s  {useful / t:8.1f} tok/s")
+        # Backends carrying the fused activation-quant prologue are timed
+        # both ways; the "+two_pass" row is the fused-vs-unfused delta at
+        # the engine level (BENCH_backend.json is the running record).
+        variants = [(name, True)]
+        if backend_registry.resolve(name).supports(
+                "fused_act_segment_matmul"):
+            variants.append((f"{name}+two_pass", False))
+        for label, fuse in variants:
+            eng = engine_lib.DecodeEngine(
+                params, cfg, soniq.EngineConfig(
+                    max_batch=args.max_batch, cache_len=128,
+                    prefill_chunk=args.prefill_chunk, backend=name,
+                    fuse_act_quant=fuse))
+            list(eng.serve([Request(prompt=np.ones(5, np.int32),
+                                    max_new_tokens=2, seed=0)]))  # warm jit
+            t = run_continuous(eng, reqs)
+            sweep[label] = {"tok_s": round(useful / t, 1),
+                            "seconds": round(t, 3)}
+            print(f"backend {label:>26}: {t:6.2f}s  "
+                  f"{useful / t:8.1f} tok/s")
     if sweep:
         record_backend_bench("serve_throughput", {
             "workload": {"requests": len(reqs), "useful_tokens": useful,

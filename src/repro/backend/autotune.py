@@ -23,19 +23,27 @@ from __future__ import annotations
 import json
 import os
 import sys
+import tempfile
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 ENV_CACHE = "SONIQ_AUTOTUNE_CACHE"
 
-# Static defaults shipped with the kernels (see kernels/*.py headers for
-# the VMEM budget math behind them).
+# The tunable-op vocabulary: which ops have block knobs, and the
+# documented values mirroring each kernel signature's defaults (see
+# kernels/*.py headers for the VMEM budget math). The dispatch path does
+# NOT read these — a cache miss returns {} and the kernel signature
+# defaults apply — they exist for operators/tests enumerating what can be
+# tuned (tests assert the keys stay a subset of backend OPS).
 DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
     "packed_segment_matmul": {"block_m": 256, "block_n": 128,
                               "block_k": 256},
+    "fused_act_segment_matmul": {"block_m": 256, "block_n": 128,
+                                 "block_k": 256},
     "quantize_pack": {"block_k": 256, "block_n": 256},
     "noise_inject": {"block_k": 256, "block_n": 256},
+    "fake_quant": {"block_m": 256, "block_k": 256},
 }
 
 _CACHE: Optional[Dict[str, Dict]] = None
@@ -60,16 +68,20 @@ def cache_key(op: str, shape: Sequence[int], p: int, dtype,
     return f"{key}|backend={backend}" if backend else key
 
 
+def _read_file(path) -> Dict[str, Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
 def _load() -> Dict[str, Dict]:
     global _CACHE, _CACHE_FILE
     path = str(cache_path())
     if _CACHE is None or _CACHE_FILE != path:
         _CACHE_FILE = path
-        try:
-            with open(path) as f:
-                _CACHE = json.load(f)
-        except (OSError, ValueError):
-            _CACHE = {}
+        _CACHE = _read_file(path)
     return _CACHE
 
 
@@ -92,15 +104,32 @@ def lookup(op: str, *, shape: Sequence[int], p: int, dtype,
 
 def save_entry(key: str, blocks: Dict[str, int], us: float,
                candidates: int) -> None:
-    cache = dict(_load())
-    cache[key] = {"blocks": blocks, "us": round(float(us), 2),
-                  "candidates": int(candidates)}
+    """Persist one tuned entry with a read-merge-save cycle.
+
+    Concurrent sweeps (e.g. two ``runtime_proxy.py --autotune`` processes
+    covering different ``--backends``) share the cache file: each save
+    re-reads the *live* file — never the possibly stale in-memory snapshot
+    — merges its one entry in, and publishes atomically via a
+    uniquely-named temp file + ``os.replace``. The worst interleaving
+    loses one entry to a later merge, never the whole file to a torn or
+    shared-temp-file write."""
     path = cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_suffix(".tmp")
-    with open(tmp, "w") as f:
-        json.dump(cache, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    cache = _read_file(path)
+    cache[key] = {"blocks": blocks, "us": round(float(us), 2),
+                  "candidates": int(candidates)}
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                               prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     invalidate()
 
 
@@ -119,12 +148,18 @@ def candidates_for(op: str, shape: Sequence[int]) -> List[Dict[str, int]]:
     """A small grid of legal block configs for ``op`` at ``shape``
     (divisor-snapped, so every candidate tiles exactly)."""
     from repro.core.qtypes import GROUP_SIZE
-    if op == "packed_segment_matmul":
+    if op in ("packed_segment_matmul", "fused_act_segment_matmul"):
         m, kp, n = shape
         return [{"block_m": bm, "block_n": bn, "block_k": bk}
                 for bm in _divisor_candidates(m, 1, (64, 128, 256, 512))
                 for bn in _divisor_candidates(n, 1, (128, 256))
                 for bk in _divisor_candidates(kp, GROUP_SIZE,
+                                              (128, 256, 512))]
+    if op == "fake_quant":
+        m, k = shape
+        return [{"block_m": bm, "block_k": bk}
+                for bm in _divisor_candidates(m, 1, (64, 128, 256, 512))
+                for bk in _divisor_candidates(k, GROUP_SIZE,
                                               (128, 256, 512))]
     k, n = shape
     return [{"block_k": bk, "block_n": bn}

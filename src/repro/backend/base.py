@@ -1,9 +1,11 @@
 """The kernel-backend protocol (DESIGN.md §11).
 
-A :class:`Backend` owns the implementations of the five SONIQ hot-path
+A :class:`Backend` owns the implementations of the six SONIQ hot-path
 ops — the operations every lifecycle phase's forward rule is built from:
 
     packed_segment_matmul   x @ unpack_dequant(wp) for one uniform-p segment
+    fused_act_segment_matmul  the same GEMM with the activation fake-quant
+                            fused into its prologue (serve fast path)
     packed_matmul           full mixed [K4|K2|K1] serve-mode linear
     quantize_pack           SMOL quantize + bit-pack one uniform-p weight
     noise_inject            Phase-I fused perturbation  clip(w + σ(s)·ε)
@@ -45,12 +47,15 @@ from repro.core.qtypes import GROUP_SIZE
 
 # The op vocabulary of the protocol (capability negotiation keys).
 OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
-                        "quantize_pack", "noise_inject", "fake_quant")
+                        "fused_act_segment_matmul", "quantize_pack",
+                        "noise_inject", "fake_quant")
 
 # Where each op's backend-specific implementation actually lives (defaults
-# to the op name itself): noise_inject's public entry point is the shared
-# custom-VJP wrapper, so its capability hook is the forward method.
-_OP_IMPL_HOOK = {"noise_inject": "_noise_inject_fwd"}
+# to the op name itself): noise_inject's and fake_quant's public entry
+# points are the shared custom-VJP wrappers, so their capability hooks are
+# the forward methods.
+_OP_IMPL_HOOK = {"noise_inject": "_noise_inject_fwd",
+                 "fake_quant": "_fake_quant_fwd"}
 
 
 class BackendUnavailable(RuntimeError):
@@ -59,16 +64,26 @@ class BackendUnavailable(RuntimeError):
     callers that want negotiation pass no name at all."""
 
 
-def act_scale(x, act_scale_mode: str):
+# Floor on the dynamic abs-max before it becomes a divisor. A padding /
+# freshly-reset batch row is exactly zero, and 0-abs-max would make both
+# the shared driver's fake_quant and the fused kernel prologue divide by
+# zero (NaN/Inf logits for *every* row once they mix in the matmul).
+# tests/test_backend_dispatch.py pins the zero-row regression.
+ACT_SCALE_EPS = 1e-6
+
+
+def act_scale(x, act_scale_mode: str, eps: float = ACT_SCALE_EPS):
     """Dynamic activation scale per the config policy. ``per_token``
     reduces over the last dim only (row-independent — what continuous
     batching requires); ``per_tensor`` over the whole tensor; ``none`` is
-    the paper-faithful pre-scaled setting."""
+    the paper-faithful pre-scaled setting. The abs-max is clamped to
+    ``eps`` so all-zero rows yield a tiny finite scale, never a 0
+    divisor."""
     if act_scale_mode == "none":
         return jnp.asarray(1.0, jnp.float32)
     if act_scale_mode == "per_token":
-        return quant.abs_max_scale(x, axis=-1).astype(jnp.float32)
-    return quant.abs_max_scale(x).astype(jnp.float32)
+        return quant.abs_max_scale(x, axis=-1, eps=eps).astype(jnp.float32)
+    return quant.abs_max_scale(x, eps=eps).astype(jnp.float32)
 
 
 def hash_eps(shape: Tuple[int, ...], seed):
@@ -120,6 +135,34 @@ def _noise_inject_bwd(backend, group_size, blocks, res, g):
 
 
 _noise_inject.defvjp(_noise_inject_fwd, _noise_inject_bwd)
+
+
+# --------------------------------------------------------------------------
+# fake_quant: shared clipped-STE custom_vjp over the backend forward.
+# --------------------------------------------------------------------------
+# Same pattern as noise_inject: the public op is one custom_vjp whose
+# forward is the backend hook (a fused Pallas kernel on the Pallas
+# backends, the jnp reference elsewhere) and whose backward recomputes the
+# in-range mask in jnp — so QAT differentiates through every backend with
+# gradients identical to core.quant.fake_quant's STE.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 4))
+def _fake_quant(backend, x, pbits, scale, group_size):
+    return backend._fake_quant_fwd(x, pbits, scale, group_size)
+
+
+def _fake_quant_fwd(backend, x, pbits, scale, group_size):
+    out = backend._fake_quant_fwd(x, pbits, scale, group_size)
+    return out, (x, pbits, scale)
+
+
+def _fake_quant_bwd(backend, group_size, res, g):
+    x, pbits, scale = res
+    _, in_range = quant._fake_quant_fwd_impl(x, pbits, scale, group_size)
+    return g * in_range, jnp.zeros_like(pbits), jnp.zeros_like(scale)
+
+
+_fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
 
 
 def noise_inject_jnp(w, s, seed, group_size: int = GROUP_SIZE):
@@ -178,11 +221,39 @@ class Backend:
 
     def fake_quant(self, x, pbits, scale, group_size: int = GROUP_SIZE):
         """Clipped-STE quantize-dequantize along the last dim with
-        per-group precisions. Shared jnp/custom_vjp implementation — the
-        QAT backward must stay a custom VJP, so backends that want to
-        accelerate the forward override ``_fake_quant_fwd`` territory in
-        ``core.quant`` rather than this entry point."""
-        return quant.fake_quant(x, pbits, scale, group_size)
+        per-group precisions. Differentiable in ``x`` on every backend via
+        the shared custom VJP (the STE backward recomputes the in-range
+        mask in jnp); backends accelerate the forward by overriding
+        ``_fake_quant_fwd``, never this entry point."""
+        return _fake_quant(self, x, jnp.asarray(pbits, jnp.float32),
+                           jnp.asarray(scale, jnp.float32), group_size)
+
+    def _fake_quant_fwd(self, x, pbits, scale, group_size: int):
+        """Forward-only quantize-dequantize (wrapped by the custom VJP)."""
+        return quant._fake_quant_fwd_impl(x, pbits, scale, group_size)[0]
+
+    def fused_act_segment_matmul(self, x, wp, scales=None, act_scales=None,
+                                 *, p: int, group_size: int = GROUP_SIZE,
+                                 **blocks):
+        """``packed_segment_matmul`` with the activation quantization fused
+        into its prologue: quantize-dequantize x at the segment's uniform
+        ``p`` with per-token scales ``act_scales`` [M, 1] (None = the
+        paper-faithful unscaled grid), then the segment GEMM.
+
+        The base implementation is the two-pass reference composition —
+        bit-exact with a fused kernel by construction, since fusion only
+        removes the HBM round-trip of the quantized activations, not any
+        arithmetic. Backends that carry a real fused kernel override this;
+        the shared ``packed_matmul`` driver only takes the fused path when
+        they do (``supports("fused_act_segment_matmul")``)."""
+        kp = x.shape[-1]
+        pb = jnp.full((max(kp // group_size, 1),), float(p), jnp.float32)
+        s = jnp.asarray(1.0 if act_scales is None else act_scales,
+                        jnp.float32)
+        xq = quant.fake_quant(x, pb, s, group_size)
+        return self.packed_segment_matmul(xq, wp, scales, p=p,
+                                          act_quant=False,
+                                          group_size=group_size, **blocks)
 
     def noise_inject(self, w, s, seed, *, group_size: int = GROUP_SIZE,
                      **blocks):
@@ -205,7 +276,15 @@ class Backend:
         The driver is shared so every backend applies *identical*
         activation scaling (the whole-batch-abs-max magnitude leak the
         old kernel wrapper had cannot reappear per-backend) and identical
-        segment/accumulation order.
+        segment/accumulation order. Activation quantization has two
+        bit-exact forms (DESIGN.md §11 "Fused activation quantization"):
+        the two-pass reference (one whole-K ``fake_quant``, then plain
+        segment GEMMs — what ``xla_ref`` always runs) and the fused form
+        (the epsilon-clamped per-token scale is still computed here, since
+        it spans the full permuted row across segment boundaries, but the
+        snap-to-grid moves into the segment kernel's prologue) taken when
+        the backend carries ``fused_act_segment_matmul`` and
+        ``qcfg.fuse_act_quant`` allows it.
         """
         bufs = {name: serve_params[name] for name, _p, _v in
                 pack_lib.SEGMENTS}
@@ -213,19 +292,32 @@ class Backend:
                 for name, _p, v in pack_lib.SEGMENTS)
         g = qcfg.eff_group_size(k)
         x = jnp.take(x, serve_params["perm"], axis=-1)
+        fused = False
+        sx = None
         if qcfg.quantize_activations:
-            pbits = serve_params.get("pbits_sorted")
-            if pbits is None:
-                # Legacy packed dicts may omit the metadata leaf; the
-                # sorted per-group precisions are fully determined by the
-                # carrier shapes.
-                pbits = jnp.asarray(np.concatenate(
-                    [np.full(ng, p, np.float32) for _n, p, _o, _kp, _go, ng
-                     in pack_lib.iter_packed_segments(bufs, g)]))
             sx = act_scale(x, qcfg.act_scale_mode)
-            x = self.fake_quant(x, pbits.astype(jnp.float32), sx, g)
+            fused = (getattr(qcfg, "fuse_act_quant", True)
+                     and self.supports("fused_act_segment_matmul"))
+            if not fused:
+                pbits = serve_params.get("pbits_sorted")
+                if pbits is None:
+                    # Legacy packed dicts may omit the metadata leaf; the
+                    # sorted per-group precisions are fully determined by
+                    # the carrier shapes.
+                    pbits = jnp.asarray(np.concatenate(
+                        [np.full(ng, p, np.float32)
+                         for _n, p, _o, _kp, _go, ng
+                         in pack_lib.iter_packed_segments(bufs, g)]))
+                x = self.fake_quant(x, pbits.astype(jnp.float32), sx, g)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, k)
+        if fused:
+            # One [M, 1] per-token scale operand for every segment kernel
+            # (per_tensor / "none" broadcast the same value to each row —
+            # bit-identical to the two-pass division by a scalar).
+            sx2 = jnp.broadcast_to(
+                jnp.asarray(sx, jnp.float32).reshape(-1, 1),
+                (x2.shape[0], 1))
         wscale = serve_params.get("wscale")
         n = max(serve_params[name].shape[1]
                 for name, _p, _v in pack_lib.SEGMENTS)
@@ -234,9 +326,14 @@ class Backend:
                 bufs, g):
             seg_scales = None if wscale is None else \
                 jax.lax.dynamic_slice_in_dim(wscale, goff, ng)
-            y = y + self.packed_segment_matmul(
-                x2[:, off:off + kp], serve_params[name], seg_scales, p=p,
-                act_quant=False, group_size=g, **blocks)
+            if fused:
+                y = y + self.fused_act_segment_matmul(
+                    x2[:, off:off + kp], serve_params[name], seg_scales,
+                    sx2, p=p, group_size=g, **blocks)
+            else:
+                y = y + self.packed_segment_matmul(
+                    x2[:, off:off + kp], serve_params[name], seg_scales,
+                    p=p, act_quant=False, group_size=g, **blocks)
         b = serve_params.get("b")
         if b is not None:
             y = y + b.astype(y.dtype)

@@ -1,8 +1,10 @@
 """``pallas_interpret`` / ``pallas_mosaic`` — the Pallas kernel backends.
 
 Both route the per-segment ops through the fused TPU kernels in
-``repro.kernels`` (in-register unpack + dequant + MXU GEMM, fused SMOL
-quantize+pack, in-kernel-PRNG noise). ``pallas_interpret`` runs them under
+``repro.kernels`` (in-register unpack + dequant + MXU GEMM — with the
+serve activation quantization fused into its prologue —, fused SMOL
+quantize+pack, in-kernel-PRNG noise, fused QAT fake_quant forward).
+``pallas_interpret`` runs them under
 the Pallas interpreter (any platform — the CI parity leg);
 ``pallas_mosaic`` compiles through Mosaic and is only available on a real
 TPU. Selection between them is a registry concern ("pallas" alias);
@@ -25,21 +27,40 @@ from __future__ import annotations
 import importlib
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.qtypes import GROUP_SIZE
 
-# The kernels package re-exports the op *functions* under the same names
-# as their home modules (kernels.packed_matmul is a function attribute of
-# the package), so plain `from repro.kernels import packed_matmul` would
-# grab the function; import the modules explicitly.
+# The kernels package still answers the legacy function names (with a
+# DeprecationWarning); import the kernel modules by their dotted paths.
 _pm = importlib.import_module("repro.kernels.packed_matmul")
 _qp = importlib.import_module("repro.kernels.quant_pack")
 _ni = importlib.import_module("repro.kernels.noise_inject")
+_fq = importlib.import_module("repro.kernels.fake_quant")
 
 from . import autotune
 from .base import Backend
 from .registry import register
 from .xla_ref import XLA_REF as _REF   # per-call geometry fallback
+
+# Trace-time dispatch counters for the fused kernel paths. CI's
+# SONIQ_BACKEND=pallas_interpret leg asserts the serve driver actually
+# engaged the fused activation-quant prologue (not the jnp fallback).
+_FUSED_ACT_CALLS = 0
+_FAKE_QUANT_KERNEL_CALLS = 0
+
+
+def fused_act_call_count() -> int:
+    """How many times a Pallas backend dispatched the fused activation-
+    quant GEMM kernel (counted at trace time, not per executed step)."""
+    return _FUSED_ACT_CALLS
+
+
+def fake_quant_kernel_call_count() -> int:
+    """How many times a Pallas backend dispatched the fused fake_quant
+    forward kernel (vs the jnp geometry fallback)."""
+    return _FAKE_QUANT_KERNEL_CALLS
 
 
 class PallasBackend(Backend):
@@ -59,7 +80,7 @@ class PallasBackend(Backend):
                               act_quant: bool = False,
                               group_size: int = GROUP_SIZE, **blocks):
         if group_size != GROUP_SIZE or x.ndim != 2 \
-                or x.shape[1] % GROUP_SIZE:
+                or x.shape[1] == 0 or x.shape[1] % GROUP_SIZE:
             return _REF.packed_segment_matmul(
                 x, wp, scales, p=p, act_quant=act_quant,
                 group_size=group_size)
@@ -69,6 +90,24 @@ class PallasBackend(Backend):
         return _pm.packed_segment_matmul(x, wp, scales, p=p,
                                          act_quant=act_quant,
                                          interpret=self.interpret, **blocks)
+
+    def fused_act_segment_matmul(self, x, wp, scales=None, act_scales=None,
+                                 *, p: int, group_size: int = GROUP_SIZE,
+                                 **blocks):
+        if group_size != GROUP_SIZE or x.ndim != 2 \
+                or x.shape[1] == 0 or x.shape[1] % GROUP_SIZE:
+            return _REF.fused_act_segment_matmul(
+                x, wp, scales, act_scales, p=p, group_size=group_size)
+        global _FUSED_ACT_CALLS
+        _FUSED_ACT_CALLS += 1
+        m, kp = x.shape
+        if act_scales is None:
+            act_scales = jnp.ones((m, 1), jnp.float32)
+        blocks = self._blocks("fused_act_segment_matmul",
+                              (m, kp, wp.shape[1]), p, x.dtype, blocks)
+        return _pm.fused_act_segment_matmul(
+            x, act_scales, wp, scales, p=p, interpret=self.interpret,
+            **blocks)
 
     def quantize_pack(self, w, scales=None, *, p: int,
                       group_size: int = GROUP_SIZE, **blocks):
@@ -88,6 +127,39 @@ class PallasBackend(Backend):
                               blocks)
         return _ni.noise_inject(w, s, seed, interpret=self.interpret,
                                 **blocks)
+
+    def _fake_quant_fwd(self, x, pbits, scale, group_size):
+        """Fused QAT quantize-dequantize forward. Falls back to the jnp
+        reference (numerically identical element-wise math) for geometry
+        the kernel does not cover: non-16 groups, K not a multiple of the
+        group, or a scale layout that is neither per-row nor per-group."""
+        pb = jnp.asarray(pbits)
+        k = x.shape[-1] if x.ndim else 0
+        if (group_size != GROUP_SIZE or x.ndim < 1 or k == 0
+                or k % GROUP_SIZE or pb.ndim != 1
+                or pb.shape[0] * GROUP_SIZE != k):
+            return super()._fake_quant_fwd(x, pbits, scale, group_size)
+        ng = k // GROUP_SIZE
+        lead = x.shape[:-1]
+        m = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        if m == 0:
+            return super()._fake_quant_fwd(x, pbits, scale, group_size)
+        s = jnp.asarray(scale, jnp.float32)
+        if s.ndim == 0 or (s.shape[-1] == 1
+                           and all(d == 1 for d in s.shape[:-1])):
+            s_op, row = jnp.broadcast_to(s.reshape(-1, 1), (m, 1)), True
+        elif s.shape == lead + (1,):
+            s_op, row = s.reshape(m, 1), True
+        elif s.ndim == 1 and s.shape[0] == ng:
+            s_op, row = s, False
+        else:
+            return super()._fake_quant_fwd(x, pbits, scale, group_size)
+        global _FAKE_QUANT_KERNEL_CALLS
+        _FAKE_QUANT_KERNEL_CALLS += 1
+        blocks = self._blocks("fake_quant", (m, k), 0, x.dtype, {})
+        y2 = _fq.fake_quant(x.reshape(m, k), pb, s_op, row_scale=row,
+                            interpret=self.interpret, **blocks)
+        return y2.reshape(x.shape)
 
 
 class PallasInterpretBackend(PallasBackend):

@@ -57,8 +57,12 @@ class XlaRefBackend(Backend):
         u = quant.quantize_to_int(ws, p).astype(jnp.uint8)
         return pack_lib.pack_codes(u, p)
 
-    # noise_inject / fake_quant: the shared reference implementations in
-    # Backend are already pure jnp — nothing to override.
+    # noise_inject / fake_quant / fused_act_segment_matmul: the shared
+    # reference implementations in Backend are already pure jnp — nothing
+    # to override. In particular NOT overriding fused_act_segment_matmul
+    # keeps this backend on the two-pass activation-quant form, which is
+    # what makes it the exactness oracle the fused Pallas prologue is
+    # gated against (DESIGN.md §11).
 
 
 XLA_REF = register(XlaRefBackend())

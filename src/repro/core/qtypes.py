@@ -75,6 +75,13 @@ class QuantConfig:
     # available backend for the platform (see repro.backend.registry).
     backend: Optional[str] = None
 
+    # Let a backend that carries a fused activation-quant GEMM prologue
+    # (``fused_act_segment_matmul``) use it on the serve path. The fused
+    # and two-pass forms are bit-exact (DESIGN.md §11), so this stays on;
+    # False forces the two-pass reference form everywhere — benchmarks use
+    # it to measure the fusion delta, parity tests to pin the exactness.
+    fuse_act_quant: bool = True
+
     # DEPRECATED — legacy boolean knob, superseded by ``backend``.
     # use_pallas=True is interpreted as backend="pallas" when ``backend``
     # is unset.

@@ -115,7 +115,13 @@ def _act_scale(x, qcfg: QuantConfig):
 
 
 def _quantize_weight(w, pbits, qcfg: QuantConfig, group_size: int):
-    """fake-quant W [K, N] along K with per-group precisions."""
+    """fake-quant W [K, N] along K with per-group precisions.
+
+    Runs on the kernel backend's ``fake_quant`` op: the QAT forward is a
+    fused Pallas kernel on the Pallas backends (no intermediate xs/q
+    tensors in HBM) and the jnp reference elsewhere, with the clipped-STE
+    backward shared through one custom VJP — so Phase-II gradients are
+    identical on every backend."""
     sw = _weight_scales(w, qcfg, group_size)                  # [K//G]
     wq_t = _backend(qcfg).fake_quant(jnp.swapaxes(w, 0, 1), pbits,
                                      sw, group_size)          # [N, K]
@@ -205,9 +211,12 @@ def _linear_serve(params, x, qcfg, rng):
     unpack-dequant GEMM, fp32 accumulation) is the backend's shared
     ``packed_matmul`` driver: ``xla_ref`` runs the pure-jnp emulation of the
     kernel arithmetic (uint8 loads -> shift/mask unpack -> affine dequant ->
-    matmul), the Pallas backends run the fused kernels. Segment order and
-    activation scaling live in the driver, so backends agree token-for-token
-    at fp32."""
+    matmul), the Pallas backends run the fused kernels — including, when
+    ``qcfg.fuse_act_quant`` allows, the activation quantization folded into
+    the segment kernel's prologue instead of a separate full-tensor
+    ``fake_quant`` pass per decode step. Segment order and activation
+    scaling live in the driver, so backends agree token-for-token at fp32
+    (DESIGN.md §11 "Fused activation quantization")."""
     return _backend(qcfg).packed_matmul(params, x, qcfg)
 
 

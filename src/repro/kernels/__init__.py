@@ -1,18 +1,63 @@
 """Pallas TPU kernels for the SONIQ hot paths (validated via the
 ``pallas_interpret`` backend).
 
-packed_matmul — mixed 1/2/4-bit packed GEMM (the paper's vmac_Pn)
+packed_matmul — mixed 1/2/4-bit packed GEMM (the paper's vmac_Pn) plus the
+                fused activation-quant prologue variant
 quant_pack    — fused SMOL quantize + bit-pack
 noise_inject  — fused Phase-I perturbation with in-kernel PRNG
+fake_quant    — fused clipped-STE quantize-dequantize (QAT forward)
 
 These modules are the *implementations* behind the ``pallas_interpret`` /
 ``pallas_mosaic`` backends in :mod:`repro.backend`; the hot paths reach
-them through the dispatch registry, never directly. The same-named
-function re-exports below are the DEPRECATED pre-registry wrappers
-(``kernels.ops``) kept for external callers.
-"""
-from . import ops, prng, ref
-from .ops import noise_inject, packed_matmul, packed_segment_matmul, quantize_pack
+them through the dispatch registry, never directly.
 
-__all__ = ["ops", "prng", "ref", "noise_inject", "packed_matmul",
-           "packed_segment_matmul", "quantize_pack"]
+Naming: the DEPRECATED pre-registry wrappers in ``kernels.ops`` were
+historically re-exported here under the same names as their home modules,
+so ``repro.kernels.packed_matmul`` was the *function*, silently shadowing
+the module and breaking ``importlib``-style access. The function names
+still resolve for compat — via ``__getattr__``, with a
+``DeprecationWarning`` — and every kernel module is additionally exposed
+under an unambiguous ``*_mod`` alias (``packed_matmul_mod`` etc.); new
+code should use :mod:`repro.backend` instead of either.
+"""
+import warnings as _warnings
+
+from . import ops, prng, ref
+from . import fake_quant, quant_pack          # unshadowed module names
+from . import fake_quant as fake_quant_mod
+from . import noise_inject as noise_inject_mod
+from . import packed_matmul as packed_matmul_mod
+from . import quant_pack as quant_pack_mod
+
+# Importing a submodule binds it as a package attribute; drop the two
+# bindings the legacy function re-exports shadow so access goes through
+# __getattr__ (which warns). importlib.import_module and dotted-path
+# `from repro.kernels.packed_matmul import ...` still work — they resolve
+# via sys.modules, not these attributes.
+del packed_matmul, noise_inject  # noqa: F821
+
+# Legacy kernels.ops function re-exports (two of which shadow their home
+# modules). Kept for compat; each access warns.
+_DEPRECATED_FUNCS = ("packed_matmul", "packed_segment_matmul",
+                     "quantize_pack", "noise_inject")
+
+__all__ = ["ops", "prng", "ref", "fake_quant", "quant_pack",
+           "packed_matmul_mod", "quant_pack_mod", "noise_inject_mod",
+           "fake_quant_mod"] + list(_DEPRECATED_FUNCS)
+
+
+def __getattr__(name):
+    if name in _DEPRECATED_FUNCS:
+        _warnings.warn(
+            f"`repro.kernels.{name}` resolves to the deprecated "
+            f"kernels.ops wrapper function (for `packed_matmul` and "
+            f"`noise_inject` it shadows the same-named kernel module); "
+            f"use the `*_mod` module aliases or the repro.backend "
+            "dispatch registry instead",
+            DeprecationWarning, stacklevel=2)
+        return getattr(ops, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,77 @@
+"""Fused clipped-STE fake-quantization forward (QAT hot path).
+
+x [M, K] is quantize-dequantized along K with per-16-channel-group
+precisions ``pbits`` [K//16] and either a per-row scale [M, 1] (dynamic
+activation scaling) or a per-group scale [K//16] (weight scaling) — the
+two shapes ``core.quant.fake_quant`` actually receives from the QAT phase
+rules. Grid (M/bm, K/bk); pure VPU (round/clip/multiply), no MXU.
+
+Element-wise arithmetic is kept identical to
+``core.quant._fake_quant_fwd_impl`` (branchless in p: h = 2^(1-p),
+u = clip(round((x/s/h + 2^p - 1) / 2)), back through (2u - (2^p-1))·h·s,
+rounded through the input dtype), so the kernel is bit-exact against the
+jnp reference — the backward pass (clipped STE) recomputes the in-range
+mask in jnp through the shared custom VJP in ``repro.backend.base``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.qtypes import GROUP_SIZE
+
+
+def _kernel(x_ref, pb_ref, s_ref, o_ref, *, row_scale: bool):
+    x = x_ref[...].astype(jnp.float32)
+    p = jnp.repeat(pb_ref[...].astype(jnp.float32), GROUP_SIZE,
+                   axis=1)                                  # [1, bk]
+    if row_scale:
+        s = s_ref[...].astype(jnp.float32)                  # [bm, 1]
+    else:
+        s = jnp.repeat(s_ref[...].astype(jnp.float32), GROUP_SIZE,
+                       axis=1)                              # [1, bk]
+    xs = x / s
+    h = jnp.exp2(1.0 - p)                 # 2^(1-p): half-step
+    two_p = 2.0 / h                       # 2^p
+    u = jnp.clip(jnp.round((xs / h + (two_p - 1.0)) / 2.0), 0.0,
+                 two_p - 1.0)
+    q = (2.0 * u - (two_p - 1.0)) * h
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "row_scale", "block_m", "block_k", "interpret"))
+def fake_quant(x, pbits, scale, *, row_scale: bool, block_m: int = 256,
+               block_k: int = 256, interpret: bool = True):
+    """x [M, K], pbits [K//16] -> quantize-dequantized x (same dtype).
+
+    ``scale`` is [M, 1] when ``row_scale`` (per-token activation scaling)
+    else [K//16] (per-group weight scaling).
+    """
+    from .packed_matmul import fit_block
+    m, k = x.shape
+    bm = fit_block(m, block_m)
+    bk = fit_block(k, block_k, GROUP_SIZE)
+    pb2 = jnp.asarray(pbits, jnp.float32).reshape(1, -1)
+    if row_scale:
+        s_op = jnp.asarray(scale, jnp.float32).reshape(m, 1)
+        s_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+    else:
+        s_op = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+        s_spec = pl.BlockSpec((1, bk // GROUP_SIZE), lambda i, j: (0, j))
+    kern = functools.partial(_kernel, row_scale=row_scale)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bk // GROUP_SIZE), lambda i, j: (0, j)),
+            s_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=interpret,
+    )(x, pb2, s_op)

@@ -66,21 +66,80 @@ def _snap(x, p: int):
     return (2.0 * u - (two_p - 1.0)) * h
 
 
-def _kernel(x_ref, wp_ref, s_ref, o_ref, *, p: int, bk: int,
-            act_quant: bool, use_scales: bool):
+def _accumulate(xq, wp_ref, s_ref, o_ref, *, p: int, bk: int,
+                use_scales: bool):
+    """Shared GEMM tail of both segment kernels: zero the accumulator on
+    the first K step, unpack-dequant the weight tile, apply per-group
+    scales, accumulate the MXU dot. One implementation so the fused and
+    plain kernels cannot drift apart."""
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    if act_quant:
-        x = _snap(x, p)
     wd = _unpack_dequant(wp_ref[...], p, bk)
     if use_scales:
         sig = s_ref[...].astype(jnp.float32)            # [bk//16, 1]
         sig = jnp.repeat(sig, GROUP_SIZE, axis=0)       # [bk, 1]
         wd = wd * sig
-    o_ref[...] += jax.lax.dot(x, wd, preferred_element_type=jnp.float32)
+    o_ref[...] += jax.lax.dot(xq, wd, preferred_element_type=jnp.float32)
+
+
+def _kernel(x_ref, wp_ref, s_ref, o_ref, *, p: int, bk: int,
+            act_quant: bool, use_scales: bool):
+    x = x_ref[...].astype(jnp.float32)
+    if act_quant:
+        x = _snap(x, p)
+    _accumulate(x, wp_ref, s_ref, o_ref, p=p, bk=bk, use_scales=use_scales)
+
+
+def _fused_kernel(x_ref, sx_ref, wp_ref, s_ref, o_ref, *, p: int, bk: int,
+                  use_scales: bool):
+    """Segment GEMM with the activation fake-quant fused into the prologue:
+    divide by the per-token scale, snap to the p-bit grid, rescale, and
+    round through the activation dtype — the exact element-wise arithmetic
+    of ``core.quant.fake_quant`` — before the MXU dot. One HBM read of x,
+    no materialized quantized-activation tensor."""
+    x = x_ref[...].astype(jnp.float32)
+    sx = sx_ref[...].astype(jnp.float32)                # [bm, 1] per token
+    xq = (_snap(x / sx, p) * sx).astype(x_ref.dtype).astype(jnp.float32)
+    _accumulate(xq, wp_ref, s_ref, o_ref, p=p, bk=bk, use_scales=use_scales)
+
+
+def _segment_call(kern, x, wp, s2d, *extra, bm, bn, bk, p, extra_specs=(),
+                  interpret):
+    """Shared pallas_call assembly of the segment GEMMs: (M/bm, N/bn,
+    Kp/bk) grid with K innermost, x/wp/per-group-scale block specs (any
+    ``extra`` operands slot between x and wp), f32 output."""
+    m, kp = x.shape
+    n = wp.shape[1]
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            *extra_specs,
+            pl.BlockSpec((bk * p // 8, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // GROUP_SIZE, 1), lambda i, j, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_tpu_compiler_params(),
+        interpret=interpret,
+    )(x, *extra, wp, s2d)
+
+
+def _fit_segment_blocks(x, wp, p, block_m, block_n, block_k):
+    m, kp = x.shape
+    assert wp.shape[0] * (8 // p) == kp, (wp.shape, kp, p)
+    return (fit_block(m, block_m), fit_block(wp.shape[1], block_n),
+            fit_block(kp, block_k, GROUP_SIZE))
+
+
+def _prep_scales(scales, kp):
+    use_scales = scales is not None
+    if not use_scales:  # dummy operand keeps one kernel signature
+        scales = jnp.ones((kp // GROUP_SIZE,), jnp.float32)
+    return use_scales, scales.reshape(-1, 1).astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -93,31 +152,37 @@ def packed_segment_matmul(x, wp, scales, *, p: int, block_m: int = 256,
     scales: [Kp//16] per-group f32 or None. Pre-divide x by the activation
     scale (and rescale the output) when act_quant=True.
     """
-    m, kp = x.shape
-    n = wp.shape[1]
-    assert wp.shape[0] * (8 // p) == kp, (wp.shape, kp, p)
-    bm = fit_block(m, block_m)
-    bn = fit_block(n, block_n)
-    bk = fit_block(kp, block_k, GROUP_SIZE)
-
-    use_scales = scales is not None
-    if not use_scales:  # dummy operand keeps one kernel signature
-        scales = jnp.ones((kp // GROUP_SIZE,), jnp.float32)
-    s2d = scales.reshape(-1, 1).astype(jnp.float32)
-
-    grid = (m // bm, n // bn, kp // bk)
+    bm, bn, bk = _fit_segment_blocks(x, wp, p, block_m, block_n, block_k)
+    use_scales, s2d = _prep_scales(scales, x.shape[1])
     kern = functools.partial(_kernel, p=p, bk=bk, act_quant=act_quant,
                              use_scales=use_scales)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk * p // 8, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk // GROUP_SIZE, 1), lambda i, j, k: (k, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=_tpu_compiler_params(),
-        interpret=interpret,
-    )(x, wp, s2d)
+    return _segment_call(kern, x, wp, s2d, bm=bm, bn=bn, bk=bk, p=p,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p", "block_m", "block_n", "block_k", "interpret"))
+def fused_act_segment_matmul(x, sx, wp, scales, *, p: int,
+                             block_m: int = 256, block_n: int = 128,
+                             block_k: int = 256, interpret: bool = True):
+    """Fused-prologue segment GEMM: quantize the activations to the p-bit
+    grid with per-token scales ``sx`` [M, 1] *inside* the kernel, then
+    x @ unpack(wp) -> [M, N] f32.
+
+    Numerically this is fake_quant(x, p, sx) followed by
+    ``packed_segment_matmul(..., act_quant=False)`` — bit-exactly, since the
+    in-kernel prologue runs the same element-wise arithmetic (divide, snap,
+    rescale, round-trip through x.dtype) — but without writing the
+    quantized activation tensor back to HBM between the two. The per-token
+    abs-max reduction itself stays in the driver: the scale spans the full
+    permuted K row, which crosses segment (and therefore kernel) boundaries.
+    """
+    assert sx.shape == (x.shape[0], 1), (sx.shape, x.shape)
+    bm, bn, bk = _fit_segment_blocks(x, wp, p, block_m, block_n, block_k)
+    use_scales, s2d = _prep_scales(scales, x.shape[1])
+    kern = functools.partial(_fused_kernel, p=p, bk=bk,
+                             use_scales=use_scales)
+    sx_spec = pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0))
+    return _segment_call(kern, x, wp, s2d, jnp.asarray(sx, jnp.float32),
+                         bm=bm, bn=bn, bk=bk, p=p, extra_specs=(sx_spec,),
+                         interpret=interpret)

@@ -74,6 +74,11 @@ class EngineConfig:
     # (repro.backend.registry; DESIGN.md §11). Baked into QuantConfig at
     # engine construction, so it is jit-trace-stable.
     backend: Optional[str] = None
+    # Allow the backend to fuse the per-decode-step activation quantization
+    # into the packed-GEMM prologue (bit-exact with the two-pass form —
+    # DESIGN.md §11). False pins the two-pass reference; benchmarks flip
+    # this to record the fused-vs-unfused delta.
+    fuse_act_quant: bool = True
 
 
 class _PackedEngine:
@@ -86,6 +91,10 @@ class _PackedEngine:
             self.cfg = dataclasses.replace(
                 self.cfg, quant=dataclasses.replace(
                     self.cfg.quant, backend=ecfg.backend))
+        if not ecfg.fuse_act_quant:
+            self.cfg = dataclasses.replace(
+                self.cfg, quant=dataclasses.replace(
+                    self.cfg.quant, fuse_act_quant=False))
         if self.cfg.quant.act_scale_mode == "per_tensor":
             # Per-tensor dynamic act scales couple batch rows; serving needs
             # every request's tokens independent of batch composition

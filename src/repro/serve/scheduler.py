@@ -57,9 +57,13 @@ class Request:
     request_id: Optional[int] = None     # (re)assigned at every submit()
 
     def __post_init__(self):
+        # Degenerate requests (empty prompt, max_new_tokens <= 0) are
+        # handled at Scheduler.submit() — rejected or completed
+        # immediately — not here: a bare Request is a value object, and
+        # `assert` validation disappears under `python -O`, which is how
+        # they used to slip into the prefill->decode state machine and
+        # never finish.
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
-        assert self.prompt.size > 0, "empty prompt"
-        assert self.max_new_tokens > 0, self.max_new_tokens
 
 
 @dataclasses.dataclass
@@ -115,14 +119,32 @@ class Scheduler:
         self._next_id = itertools.count()
         self.free_slots: List[int] = list(range(max_batch))[::-1]
         self.slots: Dict[int, SlotState] = {}
+        self._immediate: List[Completion] = []
         self.step_count = 0
 
     # ------------------------------------------------------------ queue ----
     def submit(self, request: Request) -> int:
+        """Queue a request. Degenerate requests never enter the
+        prefill->decode state machine (where they could not finish): an
+        empty prompt is rejected with ``ValueError``; ``max_new_tokens <=
+        0`` completes immediately with zero generated tokens (the
+        completion is delivered by the next ``advance()``)."""
+        if request.prompt.size == 0:
+            raise ValueError(
+                "empty prompt: a request must carry at least one token to "
+                "prefill")
         # Always assign a fresh id: a re-submitted Request object (e.g.
         # after an engine reset) must not collide with this scheduler's
         # freshly issued ids.
         request.request_id = next(self._next_id)
+        if request.max_new_tokens <= 0:
+            self._immediate.append(Completion(
+                request_id=request.request_id, request=request,
+                tokens=request.prompt.copy(),
+                new_tokens=np.zeros((0,), np.int32),
+                finish_reason="length", finished_step=self.step_count,
+                steps=0))
+            return request.request_id
         heapq.heappush(self._queue,
                        (request.arrival_step, next(self._ticket), request))
         return request.request_id
@@ -136,7 +158,8 @@ class Scheduler:
         return len(self.slots)
 
     def has_work(self) -> bool:
-        return bool(self._queue) or bool(self.slots)
+        return bool(self._queue) or bool(self.slots) \
+            or bool(self._immediate)
 
     # -------------------------------------------------------- admission ----
     def admit(self) -> List[Tuple[int, Request]]:
@@ -164,9 +187,11 @@ class Scheduler:
                 ) -> List[Completion]:
         """Commit one engine step: ``fed[slot]`` tokens entered the cache,
         ``sampled[slot]`` is the token drawn from the slot's last-token
-        logits (ignored for slots still mid-prefill). Returns completions;
+        logits (ignored for slots still mid-prefill). Returns completions
+        (including any immediately-completed zero-generation submissions);
         their slots go back on the free-list (reusable next step)."""
-        done: List[Completion] = []
+        done: List[Completion] = self._immediate
+        self._immediate = []
         for slot, n in fed.items():
             st = self.slots[slot]
             st.n_fed += n

@@ -3,6 +3,8 @@ parity matrix against the ``kernels/ref.py`` oracles, activation-scale-mode
 parity between the kernel and jnp paths, the block-size autotune cache, and
 an end-to-end DecodeEngine smoke run that must be token-identical across
 selectable backends (DESIGN.md §11)."""
+import dataclasses
+import json
 import os
 
 import jax
@@ -92,13 +94,17 @@ def test_supports_capability_probe():
     from repro.backend import OPS
     assert set(autotune.DEFAULT_BLOCKS) <= set(OPS)
     pal = resolve("pallas_interpret")
-    for op in ("packed_segment_matmul", "quantize_pack", "noise_inject"):
+    for op in ("packed_segment_matmul", "fused_act_segment_matmul",
+               "quantize_pack", "noise_inject", "fake_quant"):
         assert pal.supports(op), op          # own Pallas kernels
-    assert not pal.supports("fake_quant")    # shared STE implementation
     assert not pal.supports("packed_matmul")  # shared driver
     xla = resolve("xla_ref")
     assert xla.supports("packed_segment_matmul")
     assert not xla.supports("noise_inject")  # shared hash implementation
+    assert not xla.supports("fake_quant")    # shared STE implementation
+    # xla_ref must stay on the two-pass activation-quant form — it is the
+    # exactness oracle the fused Pallas prologue is gated against.
+    assert not xla.supports("fused_act_segment_matmul")
 
 
 def test_pallas_alias_negotiates():
@@ -226,6 +232,79 @@ def test_matrix_pack_linear_identical_codes(backend):
                                       np.asarray(sp_ref[name]))
 
 
+# ------------------------------------- fused activation-quant prologue ----
+@pytest.mark.parametrize("mode", ["per_token", "per_tensor", "none"])
+def test_fused_prologue_bit_exact_vs_two_pass(mode):
+    """The fused activation-quant prologue must be *bit-exact* against the
+    two-pass form on the same backend: fusion removes the HBM round-trip
+    of the quantized activations, not any arithmetic (DESIGN.md §11)."""
+    sp, qcfg = _serve_leaf()
+    b = resolve("pallas_interpret")
+    x = jax.random.normal(jax.random.PRNGKey(9), (6, 256)) * 1.3
+    q_fused = QuantConfig(mode="serve", mix=qcfg.mix, act_scale_mode=mode)
+    q_two = dataclasses.replace(q_fused, fuse_act_quant=False)
+    np.testing.assert_array_equal(
+        np.asarray(b.packed_matmul(sp, x, q_fused)),
+        np.asarray(b.packed_matmul(sp, x, q_two)))
+
+
+def test_pallas_driver_engages_fused_prologue():
+    """Under a Pallas backend the serve driver must dispatch the fused
+    kernel (not the jnp fallback, not the two-pass form) — the perf claim
+    of the fusion depends on this actually being the hot path."""
+    from repro.backend import pallas as pallas_mod
+    sp, qcfg = _serve_leaf()
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    before = pallas_mod.fused_act_call_count()
+    smol.linear_apply(sp, x, QuantConfig(mode="serve", mix=qcfg.mix,
+                                         backend="pallas_interpret"))
+    assert pallas_mod.fused_act_call_count() > before
+    # ...and fuse_act_quant=False really does pin the two-pass form.
+    before = pallas_mod.fused_act_call_count()
+    smol.linear_apply(sp, x, QuantConfig(mode="serve", mix=qcfg.mix,
+                                         backend="pallas_interpret",
+                                         fuse_act_quant=False))
+    assert pallas_mod.fused_act_call_count() == before
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_zero_row_act_scale_is_finite(backend):
+    """Regression (satellite fix): an all-zero activation row — a padding
+    slot fresh from reset_cache_slots — must not make the per-token
+    abs-max a 0 divisor (NaN/Inf logits). The epsilon clamp lives in the
+    shared driver's act_scale and therefore also feeds the fused
+    prologue."""
+    sp, qcfg = _serve_leaf()
+    b = resolve(backend)
+    q = QuantConfig(mode="serve", mix=qcfg.mix, act_scale_mode="per_token")
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 256))
+    xz = x.at[2].set(0.0)
+    y = np.asarray(b.packed_matmul(sp, xz, q))
+    assert np.isfinite(y).all()
+    # the zero row must not perturb the other rows either
+    np.testing.assert_array_equal(
+        np.asarray(b.packed_matmul(sp, x, q))[[0, 1, 3]], y[[0, 1, 3]])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_matrix_fake_quant_grad(backend):
+    """QAT must differentiate through every backend's fake_quant forward
+    (fused Pallas kernel included) with gradients identical to the jnp
+    clipped STE — compared jit-to-jit, since XLA fusion of the *reference*
+    differs between eager and jit at the ulp level."""
+    b = resolve(backend)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    pbits = jnp.asarray(np.array([4, 2, 1, 4, 2, 1, 4, 4], np.float32))
+
+    def loss(x, fq):
+        sx = quant.abs_max_scale(x, axis=-1)
+        return jnp.sum(fq(x, pbits, sx, 16) ** 2)
+
+    got = jax.jit(jax.grad(lambda x: loss(x, b.fake_quant)))(x)
+    want = jax.jit(jax.grad(lambda x: loss(x, quant.fake_quant)))(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # --------------------------------- activation scaling (satellite fix) ----
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("mode", ["per_token", "per_tensor", "none"])
@@ -336,9 +415,32 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
 
 
 def test_autotune_candidates_are_legal():
-    for blocks in autotune.candidates_for("packed_segment_matmul",
-                                          (24, 160, 96)):
+    for op in ("packed_segment_matmul", "fused_act_segment_matmul"):
+        for blocks in autotune.candidates_for(op, (24, 160, 96)):
+            assert 24 % blocks["block_m"] == 0
+            assert 96 % blocks["block_n"] == 0
+            assert 160 % blocks["block_k"] == 0 and \
+                blocks["block_k"] % 16 == 0
+    for blocks in autotune.candidates_for("fake_quant", (24, 160)):
         assert 24 % blocks["block_m"] == 0
-        assert 96 % blocks["block_n"] == 0
-        assert 160 % blocks["block_k"] == 0 and \
-            blocks["block_k"] % 16 == 0
+        assert 160 % blocks["block_k"] == 0 and blocks["block_k"] % 16 == 0
+
+
+def test_autotune_save_merges_concurrent_writers(tmp_path, monkeypatch):
+    """Regression (satellite fix): save_entry must read-merge-save against
+    the *live* file, not dump its possibly stale in-memory snapshot — two
+    concurrent --autotune sweeps used to clobber each other's entries."""
+    path = tmp_path / "at.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    autotune.invalidate()
+    autotune.save_entry("keyA", {"block_m": 8}, 1.0, 1)
+    assert autotune._load() == json.loads(path.read_text())
+    # Another process persists keyB after our in-memory snapshot loaded.
+    data = json.loads(path.read_text())
+    data["keyB"] = {"blocks": {"block_m": 16}, "us": 2.0, "candidates": 1}
+    path.write_text(json.dumps(data))
+    autotune.save_entry("keyC", {"block_m": 32}, 3.0, 1)
+    final = json.loads(path.read_text())
+    assert set(final) == {"keyA", "keyB", "keyC"}
+    # nothing but the cache file is left behind (no orphaned temp files)
+    assert [p.name for p in tmp_path.iterdir()] == ["at.json"]

@@ -1,0 +1,102 @@
+"""Property tests for the fused activation-quantization paths (DESIGN.md
+§11 "Fused activation quantization").
+
+The contract under test: fusing the activation fake-quant into the Pallas
+segment-GEMM prologue (serve) or into a Pallas forward kernel (QAT
+fake_quant) removes HBM traffic, *never* arithmetic — so fused outputs
+must equal the two-pass ``act_scale`` + ``fake_quant`` + matmul reference
+bit-exactly on the same backend, across every segment layout (all-4 /
+all-2 / all-1 / mixed, K narrower than a group) and every
+``act_scale_mode`` (per_token / per_tensor / none), including degenerate
+all-zero and outlier rows.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.api import transforms
+from repro.backend import resolve
+from repro.core import quant
+from repro.core.qtypes import QuantConfig
+
+
+def _packed_leaf(pbits, k, n, seed):
+    qcfg = QuantConfig(mode="qat")
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.7
+    return transforms.pack_linear(
+        {"w": w, "pbits": np.asarray(pbits, np.int8)}, qcfg)
+
+
+@st.composite
+def _serve_cases(draw):
+    if draw(st.booleans(), label="narrow"):
+        k = draw(st.sampled_from([4, 8, 12]))    # K < group: one 4-bit group
+        pbits = [4]
+    else:
+        ngroups = draw(st.integers(1, 8))
+        pbits = draw(st.lists(st.sampled_from([4, 2, 1]),
+                              min_size=ngroups, max_size=ngroups))
+        k = 16 * ngroups
+    m = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2 ** 16))
+    mode = draw(st.sampled_from(["per_token", "per_tensor", "none"]))
+    zero_row = draw(st.booleans())
+    outlier_row = draw(st.booleans())
+    return pbits, k, m, seed, mode, zero_row, outlier_row
+
+
+@settings(max_examples=25, deadline=None)
+@given(_serve_cases())
+def test_fused_prologue_equals_two_pass_bit_exact(case):
+    pbits, k, m, seed, mode, zero_row, outlier_row = case
+    sp = _packed_leaf(pbits, k, 32, seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k)) * 1.5
+    if zero_row:
+        x = x.at[0].set(0.0)                     # padding / fresh slot row
+    if outlier_row:
+        x = x.at[m - 1].multiply(100.0)
+    b = resolve("pallas_interpret")
+    q_fused = QuantConfig(mode="serve", act_scale_mode=mode)
+    q_two = dataclasses.replace(q_fused, fuse_act_quant=False)
+    y_fused = np.asarray(b.packed_matmul(sp, x, q_fused))
+    y_two = np.asarray(b.packed_matmul(sp, x, q_two))
+    np.testing.assert_array_equal(y_fused, y_two)
+    assert np.isfinite(y_fused).all()
+    # and the xla_ref two-pass oracle agrees to fp32 tolerance
+    y_ref = np.asarray(resolve("xla_ref").packed_matmul(sp, x, q_fused))
+    np.testing.assert_allclose(y_fused, y_ref, rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def _fake_quant_cases(draw):
+    ngroups = draw(st.integers(1, 8))
+    pbits = draw(st.lists(st.sampled_from([4, 2, 1]),
+                          min_size=ngroups, max_size=ngroups))
+    m = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale_kind = draw(st.sampled_from(["per_row", "per_group", "scalar"]))
+    return pbits, m, seed, scale_kind
+
+
+@settings(max_examples=25, deadline=None)
+@given(_fake_quant_cases())
+def test_pallas_fake_quant_matches_jnp_bit_exact(case):
+    pbits, m, seed, scale_kind = case
+    k = 16 * len(pbits)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k)) * 1.3
+    pb = jnp.asarray(np.asarray(pbits, np.float32))
+    if scale_kind == "per_row":
+        scale = quant.abs_max_scale(x, axis=-1)
+    elif scale_kind == "per_group":
+        scale = quant.per_group_weight_scale(x.T, 16)
+    else:
+        scale = 1.0
+    got = resolve("pallas_interpret").fake_quant(x, pb, scale, 16)
+    want = quant.fake_quant(x, pb, scale, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -142,6 +142,35 @@ def test_noise_inject_deterministic_and_seed_sensitive():
     assert np.abs(a - c).max() > 0
 
 
+# ------------------------------------------- package naming (satellite) ----
+def test_kernels_module_aliases_and_deprecated_reexports():
+    """Satellite fix: the legacy function re-exports shadowed their home
+    modules (`repro.kernels.packed_matmul` was a function). The modules
+    are now importable under unambiguous `*_mod` aliases, the legacy
+    function names still resolve for compat but warn, and importlib-style
+    dotted access reaches the real modules."""
+    import importlib
+
+    import repro.kernels as K
+
+    for alias, dotted in (("packed_matmul_mod", "repro.kernels.packed_matmul"),
+                          ("quant_pack_mod", "repro.kernels.quant_pack"),
+                          ("noise_inject_mod", "repro.kernels.noise_inject"),
+                          ("fake_quant_mod", "repro.kernels.fake_quant")):
+        assert getattr(K, alias) is importlib.import_module(dotted)
+    assert callable(K.packed_matmul_mod.packed_segment_matmul)
+    # legacy function names: still the ops wrappers, now warning
+    for name in ("packed_matmul", "packed_segment_matmul", "quantize_pack",
+                 "noise_inject"):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            assert getattr(K, name) is getattr(ops, name)
+    # unshadowed module names stay plain module attributes (no warning)
+    assert K.fake_quant is K.fake_quant_mod
+    assert K.quant_pack is K.quant_pack_mod
+    with pytest.raises(AttributeError):
+        K.no_such_attribute
+
+
 def test_prng_uniformity():
     idx = jnp.arange(1 << 16, dtype=jnp.uint32)
     u = np.asarray(prng.uniform_pm1(idx, 42))

@@ -190,6 +190,52 @@ def test_scheduler_slot_reuse_and_free_list():
     assert s.free_slots == [0] and not s.has_work()
 
 
+def test_submit_rejects_empty_prompt():
+    """Satellite fix: an empty prompt can never prefill, so it must be
+    rejected at submit() instead of entering the state machine and hanging
+    the engine forever."""
+    sched = Scheduler(2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(prompt=np.zeros((0,), np.int32),
+                             max_new_tokens=4))
+    assert not sched.has_work() and sched.pending == 0
+
+
+def test_submit_zero_max_tokens_completes_immediately():
+    """Satellite fix: max_new_tokens <= 0 means nothing to generate — the
+    request completes at submit() with zero new tokens instead of
+    occupying a slot it could never leave."""
+    sched = Scheduler(2)
+    rid = sched.submit(Request(prompt=[3, 4], max_new_tokens=0))
+    assert sched.has_work()          # the completion still must be drained
+    assert sched.num_active == 0 and sched.pending == 0
+    done = sched.advance({}, {})
+    assert [c.request_id for c in done] == [rid]
+    c = done[0]
+    assert c.new_tokens.size == 0 and c.finish_reason == "length"
+    assert c.steps == 0
+    np.testing.assert_array_equal(c.tokens, [3, 4])
+    assert not sched.has_work()
+
+
+def test_engine_streams_immediate_completion_with_mixed_batch(served):
+    """A zero-generation request mixed into live traffic streams out of
+    DecodeEngine.serve() without disturbing the other requests' tokens."""
+    cfg, params = served
+    ecfg = engine.EngineConfig(max_batch=2, cache_len=64, prefill_chunk=4)
+    eng = engine.DecodeEngine(params, cfg, ecfg)
+    reqs = _mixed_requests(np.random.default_rng(3), lens=(3, 5),
+                           news=(4, 3))
+    ref = {c.request_id: c.tokens for c in eng.serve(list(reqs))}
+    eng.reset()
+    zero = Request(prompt=np.asarray([7, 8], np.int32), max_new_tokens=0)
+    got = {c.request_id: c for c in eng.serve([reqs[0], zero, reqs[1]])}
+    assert got[1].new_tokens.size == 0
+    np.testing.assert_array_equal(got[1].tokens, [7, 8])
+    np.testing.assert_array_equal(ref[0], got[0].tokens)
+    np.testing.assert_array_equal(ref[1], got[2].tokens)
+
+
 def test_scheduler_resubmit_gets_fresh_id():
     """A Request object re-submitted (e.g. after an engine reset) must not
     keep its stale id and collide with freshly issued ones."""

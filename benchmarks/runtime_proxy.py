@@ -88,6 +88,25 @@ def _spot_leaf():
     return transforms.pack_linear(params, qcfg), qcfg.mix
 
 
+# Quantized-KV decode spot shape: one decode step over a well-filled ring
+# (B slots, T ring entries, Hk kv-heads x G grouped queries, head_dim D).
+QKV_B, QKV_T, QKV_HK, QKV_G, QKV_D = 8, 1024, 4, 2, 64
+
+
+def _spot_qkv():
+    from repro.serve import kv_quant
+    key = jax.random.PRNGKey(2)
+    cache = kv_quant.init_qkv_cache(QKV_B, QKV_T, QKV_HK, QKV_D)
+    kv = jax.random.normal(key, (QKV_B, QKV_T, QKV_HK, QKV_D))
+    pos = jnp.broadcast_to(jnp.arange(QKV_T, dtype=jnp.int32)[None],
+                           (QKV_B, QKV_T))
+    cache = kv_quant.update_qkv_cache(cache, kv, -kv, pos)
+    q = jax.random.normal(jax.random.fold_in(key, 1),
+                          (QKV_B, 1, QKV_HK, QKV_G, QKV_D))
+    q_pos = jnp.full((QKV_B, 1), QKV_T - 1, jnp.int32)
+    return cache, q, q_pos
+
+
 def backend_sweep(backends, do_autotune: bool) -> dict:
     """Time the packed GEMM per backend at the spot shape; optionally run
     the block autotuner first (Pallas backends only — xla_ref has no block
@@ -134,6 +153,22 @@ def backend_sweep(backends, do_autotune: bool) -> dict:
                 / max(entry["act_quant_fused_us"], 1e-9), 3)
             derived += (f"|fused_vs_two_pass="
                         f"{entry['act_quant_fused_speedup']:.2f}x")
+
+        # Quantized-KV flash-decode spot (DESIGN.md §12): one decode step
+        # over a full ring — the fused kernel on Pallas, the dequantize-
+        # everything oracle on xla_ref. Autotune covers its block_t knob.
+        cache, qq, q_pos = _spot_qkv()
+        qkv_shape = (QKV_B * QKV_HK * QKV_G, QKV_T, QKV_D)
+
+        def qkv_call(**blocks):
+            return b.qkv_attn_decode(qq, cache, q_pos, **blocks)
+
+        if do_autotune and name.startswith("pallas"):
+            entry["qkv_autotuned_blocks"] = autotune.autotune_op(
+                qkv_call, "qkv_attn_decode", shape=qkv_shape, p=4,
+                dtype=qq.dtype, backend=b.name)
+        entry["qkv_attn_decode_us"] = round(autotune.measure(
+            lambda: qkv_call()), 1)
 
         out[name] = entry
         _common.csv_row(f"runtime_proxy.backend.{name}", entry["us"],

@@ -27,6 +27,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import soniq
@@ -35,6 +36,7 @@ from repro.configs.base import ArchConfig
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
 from repro.serve import engine as engine_lib
+from repro.serve import kv_quant
 from repro.serve.scheduler import Request
 
 try:                                   # package run (benchmarks.run)
@@ -135,18 +137,22 @@ def main(argv=None):
     sweep = {}
     for name in names:
         # Backends carrying the fused activation-quant prologue are timed
-        # both ways; the "+two_pass" row is the fused-vs-unfused delta at
-        # the engine level (BENCH_backend.json is the running record).
-        variants = [(name, True)]
+        # both ways ("+two_pass" = fused-vs-unfused engine delta); every
+        # backend is additionally timed on the quantized KV cache
+        # ("+kv4": packed 4-bit ring + qkv_attn_decode — the tokens/s leg
+        # of the cache-bytes record below). BENCH_backend.json is the
+        # running record.
+        variants = [(name, True, None)]
         if backend_registry.resolve(name).supports(
                 "fused_act_segment_matmul"):
-            variants.append((f"{name}+two_pass", False))
-        for label, fuse in variants:
+            variants.append((f"{name}+two_pass", False, None))
+        variants.append((f"{name}+kv4", True, 4))
+        for label, fuse, kv_bits in variants:
             eng = engine_lib.DecodeEngine(
                 params, cfg, soniq.EngineConfig(
                     max_batch=args.max_batch, cache_len=128,
                     prefill_chunk=args.prefill_chunk, backend=name,
-                    fuse_act_quant=fuse))
+                    fuse_act_quant=fuse, kv_bits=kv_bits))
             list(eng.serve([Request(prompt=np.ones(5, np.int32),
                                     max_new_tokens=2, seed=0)]))  # warm jit
             t = run_continuous(eng, reqs)
@@ -154,12 +160,30 @@ def main(argv=None):
                             "seconds": round(t, 3)}
             print(f"backend {label:>26}: {t:6.2f}s  "
                   f"{useful / t:8.1f} tok/s")
+    # Cache-byte accounting for the q4 claim (specs=True: no allocation).
+    # Payload = K/V codes + scales (q4) vs fp16 k/v buffers; the ``pos``
+    # ring bookkeeping is identical in both families and reported
+    # separately so the ratio stays honest (DESIGN.md §12).
+    fp16_cache = lm.init_cache(cfg, args.max_batch, 128, jnp.float16,
+                               specs=True)
+    q4_cache = lm.init_cache(cfg, args.max_batch, 128, jnp.float16,
+                             specs=True, kv_bits=4)
+    fp_payload = kv_quant.cache_payload_bytes(fp16_cache)
+    q4_payload = kv_quant.cache_payload_bytes(q4_cache)
+    kv_bytes = {"fp16_payload_bytes": fp_payload,
+                "q4_payload_bytes": q4_payload,
+                "payload_ratio": round(fp_payload / q4_payload, 2),
+                "pos_meta_bytes": kv_quant.cache_meta_bytes(q4_cache)}
+    print(f"kv cache payload: fp16 {fp_payload:,} B -> q4 {q4_payload:,} B "
+          f"({kv_bytes['payload_ratio']}x, + {kv_bytes['pos_meta_bytes']:,}"
+          " B pos metadata either way)")
     if sweep:
         record_backend_bench("serve_throughput", {
             "workload": {"requests": len(reqs), "useful_tokens": useful,
                          "max_batch": args.max_batch,
                          "prefill_chunk": args.prefill_chunk},
-            "backends": sweep})
+            "backends": sweep,
+            "kv_cache": kv_bytes})
     return tps_cont / tps_lock
 
 

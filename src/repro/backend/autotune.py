@@ -44,6 +44,9 @@ DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
     "quantize_pack": {"block_k": 256, "block_n": 256},
     "noise_inject": {"block_k": 256, "block_n": 256},
     "fake_quant": {"block_m": 256, "block_k": 256},
+    # Quantized-KV flash decode: shape key is (query rows B*Hk*S*G, ring
+    # length T, head_dim D); block_t tiles the ring inner loop.
+    "qkv_attn_decode": {"block_t": 256},
 }
 
 _CACHE: Optional[Dict[str, Dict]] = None
@@ -161,6 +164,10 @@ def candidates_for(op: str, shape: Sequence[int]) -> List[Dict[str, int]]:
                 for bm in _divisor_candidates(m, 1, (64, 128, 256, 512))
                 for bk in _divisor_candidates(k, GROUP_SIZE,
                                               (128, 256, 512))]
+    if op == "qkv_attn_decode":
+        _m, t, _d = shape
+        return [{"block_t": bt}
+                for bt in _divisor_candidates(t, 1, (128, 256, 512, 1024))]
     k, n = shape
     return [{"block_k": bk, "block_n": bn}
             for bk in _divisor_candidates(k, GROUP_SIZE, (128, 256, 512))

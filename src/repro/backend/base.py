@@ -1,6 +1,6 @@
 """The kernel-backend protocol (DESIGN.md §11).
 
-A :class:`Backend` owns the implementations of the six SONIQ hot-path
+A :class:`Backend` owns the implementations of the seven SONIQ hot-path
 ops — the operations every lifecycle phase's forward rule is built from:
 
     packed_segment_matmul   x @ unpack_dequant(wp) for one uniform-p segment
@@ -10,6 +10,8 @@ ops — the operations every lifecycle phase's forward rule is built from:
     quantize_pack           SMOL quantize + bit-pack one uniform-p weight
     noise_inject            Phase-I fused perturbation  clip(w + σ(s)·ε)
     fake_quant              straight-through quantize-dequantize (QAT)
+    qkv_attn_decode         decode attention over the packed 4-bit ring-KV
+                            cache (serve fast path, DESIGN.md §12)
 
 Backends register with :mod:`repro.backend.registry`; the phase rules in
 ``repro.core.smol`` resolve one at trace time (``QuantConfig.backend`` /
@@ -48,7 +50,7 @@ from repro.core.qtypes import GROUP_SIZE
 # The op vocabulary of the protocol (capability negotiation keys).
 OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
                         "fused_act_segment_matmul", "quantize_pack",
-                        "noise_inject", "fake_quant")
+                        "noise_inject", "fake_quant", "qkv_attn_decode")
 
 # Where each op's backend-specific implementation actually lives (defaults
 # to the op name itself): noise_inject's and fake_quant's public entry
@@ -68,8 +70,11 @@ class BackendUnavailable(RuntimeError):
 # freshly-reset batch row is exactly zero, and 0-abs-max would make both
 # the shared driver's fake_quant and the fused kernel prologue divide by
 # zero (NaN/Inf logits for *every* row once they mix in the matmul).
-# tests/test_backend_dispatch.py pins the zero-row regression.
-ACT_SCALE_EPS = 1e-6
+# tests/test_backend_dispatch.py pins the zero-row regression. The value
+# itself lives in ``core.quant`` (the bottom layer — kernels and the serve
+# KV quantizer share it without importing this module); this re-export is
+# the documented operational name.
+ACT_SCALE_EPS = quant.ACT_SCALE_EPS
 
 
 def act_scale(x, act_scale_mode: str, eps: float = ACT_SCALE_EPS):
@@ -165,6 +170,37 @@ def _fake_quant_bwd(backend, group_size, res, g):
 _fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
 
 
+# Score mask fill for decode attention — matches models.attention.NEG_INF
+# so the oracle and the fp cache path produce identical masked softmaxes.
+_ATTN_NEG_INF = -1e30
+
+
+def qkv_attn_jnp(q, k, v, k_pos, q_pos, window: Optional[int] = None):
+    """Masked GQA decode attention in fp32 — the element-exact reference
+    the fused quantized-KV flash-decode kernel is gated against.
+
+    q [B,S,Hk,G,D] (RoPE applied), k/v [B,T,Hk,D] (dequantized), k_pos
+    [B,T] ring positions (< 0 = empty/evicted entry), q_pos [B,S] (< 0 =
+    masked lane). Causal-by-position mask, optional sliding window; scores,
+    softmax and the value contraction all run in fp32. Returns
+    [B,S,Hk,G,D] fp32.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", jnp.asarray(q, jnp.float32),
+                        jnp.asarray(k, jnp.float32),
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / np.sqrt(dh))
+    m = (q_pos[:, :, None] >= k_pos[:, None, :]) \
+        & (k_pos[:, None, :] >= 0)                        # [B, S, T]
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    scores = jnp.where(m[:, None, None], scores, _ATTN_NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p,
+                      jnp.asarray(v, jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
 def noise_inject_jnp(w, s, seed, group_size: int = GROUP_SIZE):
     """Reference forward (pure jnp, counter-hash ε): clip(w + σ(s)·ε,
     ±(2-σ)). Matches ``kernels.ref.noise_inject_ref`` bit-for-bit."""
@@ -234,18 +270,30 @@ class Backend:
 
     def fused_act_segment_matmul(self, x, wp, scales=None, act_scales=None,
                                  *, p: int, group_size: int = GROUP_SIZE,
-                                 **blocks):
+                                 in_kernel_scale: bool = False, **blocks):
         """``packed_segment_matmul`` with the activation quantization fused
         into its prologue: quantize-dequantize x at the segment's uniform
         ``p`` with per-token scales ``act_scales`` [M, 1] (None = the
         paper-faithful unscaled grid), then the segment GEMM.
 
+        ``in_kernel_scale``: the segment spans the full K row (single-
+        segment layer) and the caller asks the kernel to compute the
+        per-token abs-max scale itself instead of receiving ``act_scales``
+        — the last jnp pass over the activations disappears on backends
+        with a self-scale kernel. Only legal with ``act_scales=None`` for
+        a whole-row segment under ``per_token`` scaling; the driver gates
+        it.
+
         The base implementation is the two-pass reference composition —
         bit-exact with a fused kernel by construction, since fusion only
-        removes the HBM round-trip of the quantized activations, not any
-        arithmetic. Backends that carry a real fused kernel override this;
-        the shared ``packed_matmul`` driver only takes the fused path when
-        they do (``supports("fused_act_segment_matmul")``)."""
+        removes the HBM round-trip of the quantized activations (and, for
+        the self-scale form, of the [M, 1] reduction), not any arithmetic.
+        Backends that carry a real fused kernel override this; the shared
+        ``packed_matmul`` driver only takes the fused path when they do
+        (``supports("fused_act_segment_matmul")``)."""
+        if in_kernel_scale:
+            assert act_scales is None, "in_kernel_scale computes the scale"
+            act_scales = act_scale(x, "per_token")
         kp = x.shape[-1]
         pb = jnp.full((max(kp // group_size, 1),), float(p), jnp.float32)
         s = jnp.asarray(1.0 if act_scales is None else act_scales,
@@ -254,6 +302,28 @@ class Backend:
         return self.packed_segment_matmul(xq, wp, scales, p=p,
                                           act_quant=False,
                                           group_size=group_size, **blocks)
+
+    def qkv_attn_decode(self, q, cache: Dict, q_pos, *,
+                        window: Optional[int] = None, **blocks):
+        """Decode attention over one layer's packed 4-bit ring-KV cache
+        (DESIGN.md §12). q [B,S,Hk,G,D] with RoPE applied; ``cache`` is a
+        quantized ring dict (``k_codes``/``v_codes`` [B,T,Hk,D//2] uint8,
+        ``k_scale``/``v_scale`` [B,T,Hk,1] f16, ``pos`` [B,T]); ``q_pos``
+        [B,S] absolute positions (< 0 = masked lane). Returns [B,S,Hk,G,D]
+        fp32.
+
+        The base implementation is the jnp oracle — dequantize the whole
+        cache (``kv_quant.read_qkv_cache``) then masked SDPA — which is
+        what ``xla_ref`` runs. Backends carrying a fused kernel that
+        unpacks the 2-per-byte codes and applies the per-(slot, head)
+        scales inside the attention inner loop (no materialized
+        [B,T,Hk,D] dequant buffer) override this; their numerics must stay
+        within the pinned KV parity bound of the oracle
+        (tests/test_qkv_decode.py)."""
+        del blocks                     # block shapes are a kernel concern
+        from repro.serve import kv_quant   # lazy: serve imports backend
+        k, v, k_pos = kv_quant.read_qkv_cache(cache, jnp.float32)
+        return qkv_attn_jnp(q, k, v, k_pos, q_pos, window)
 
     def noise_inject(self, w, s, seed, *, group_size: int = GROUP_SIZE,
                      **blocks):
@@ -291,13 +361,24 @@ class Backend:
         k = sum(serve_params[name].shape[0] * v
                 for name, _p, v in pack_lib.SEGMENTS)
         g = qcfg.eff_group_size(k)
+        segs = list(pack_lib.iter_packed_segments(bufs, g))
         x = jnp.take(x, serve_params["perm"], axis=-1)
         fused = False
+        self_scale = False
         sx = None
         if qcfg.quantize_activations:
-            sx = act_scale(x, qcfg.act_scale_mode)
             fused = (getattr(qcfg, "fuse_act_quant", True)
                      and self.supports("fused_act_segment_matmul"))
+            # Uniform-precision layer (one segment spans the whole K row)
+            # under per-token scaling: the [M, K] -> [M, 1] abs-max moves
+            # into the fused kernel's prologue too (it no longer crosses a
+            # segment boundary). The abs-max is permutation-invariant, so
+            # in-kernel reduction over the permuted row is bit-identical
+            # to the driver-side scale (DESIGN.md §11).
+            self_scale = (fused and qcfg.act_scale_mode == "per_token"
+                          and len(segs) == 1 and segs[0][3] == k)
+            if not self_scale:
+                sx = act_scale(x, qcfg.act_scale_mode)
             if not fused:
                 pbits = serve_params.get("pbits_sorted")
                 if pbits is None:
@@ -311,7 +392,7 @@ class Backend:
                 x = self.fake_quant(x, pbits.astype(jnp.float32), sx, g)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, k)
-        if fused:
+        if fused and not self_scale:
             # One [M, 1] per-token scale operand for every segment kernel
             # (per_tensor / "none" broadcast the same value to each row —
             # bit-identical to the two-pass division by a scalar).
@@ -322,11 +403,15 @@ class Backend:
         n = max(serve_params[name].shape[1]
                 for name, _p, _v in pack_lib.SEGMENTS)
         y = jnp.zeros((x2.shape[0], n), jnp.float32)
-        for name, p, off, kp, goff, ng in pack_lib.iter_packed_segments(
-                bufs, g):
+        for name, p, off, kp, goff, ng in segs:
             seg_scales = None if wscale is None else \
                 jax.lax.dynamic_slice_in_dim(wscale, goff, ng)
-            if fused:
+            if self_scale:
+                y = y + self.fused_act_segment_matmul(
+                    x2[:, off:off + kp], serve_params[name], seg_scales,
+                    None, p=p, group_size=g, in_kernel_scale=True,
+                    **blocks)
+            elif fused:
                 y = y + self.fused_act_segment_matmul(
                     x2[:, off:off + kp], serve_params[name], seg_scales,
                     sx2, p=p, group_size=g, **blocks)

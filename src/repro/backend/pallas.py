@@ -38,6 +38,7 @@ _pm = importlib.import_module("repro.kernels.packed_matmul")
 _qp = importlib.import_module("repro.kernels.quant_pack")
 _ni = importlib.import_module("repro.kernels.noise_inject")
 _fq = importlib.import_module("repro.kernels.fake_quant")
+_ad = importlib.import_module("repro.kernels.attn_decode")
 
 from . import autotune
 from .base import Backend
@@ -49,6 +50,7 @@ from .xla_ref import XLA_REF as _REF   # per-call geometry fallback
 # engaged the fused activation-quant prologue (not the jnp fallback).
 _FUSED_ACT_CALLS = 0
 _FAKE_QUANT_KERNEL_CALLS = 0
+_QKV_ATTN_CALLS = 0
 
 
 def fused_act_call_count() -> int:
@@ -61,6 +63,14 @@ def fake_quant_kernel_call_count() -> int:
     """How many times a Pallas backend dispatched the fused fake_quant
     forward kernel (vs the jnp geometry fallback)."""
     return _FAKE_QUANT_KERNEL_CALLS
+
+
+def qkv_attn_call_count() -> int:
+    """How many times a Pallas backend dispatched the fused quantized-KV
+    flash-decode kernel (vs the dequantize-everything jnp fallback) —
+    counted at trace time; CI's pallas_interpret leg asserts the q4 serve
+    path actually engaged the kernel (DESIGN.md §12)."""
+    return _QKV_ATTN_CALLS
 
 
 class PallasBackend(Backend):
@@ -93,20 +103,48 @@ class PallasBackend(Backend):
 
     def fused_act_segment_matmul(self, x, wp, scales=None, act_scales=None,
                                  *, p: int, group_size: int = GROUP_SIZE,
-                                 **blocks):
+                                 in_kernel_scale: bool = False, **blocks):
         if group_size != GROUP_SIZE or x.ndim != 2 \
                 or x.shape[1] == 0 or x.shape[1] % GROUP_SIZE:
             return _REF.fused_act_segment_matmul(
-                x, wp, scales, act_scales, p=p, group_size=group_size)
+                x, wp, scales, act_scales, p=p, group_size=group_size,
+                in_kernel_scale=in_kernel_scale)
         global _FUSED_ACT_CALLS
         _FUSED_ACT_CALLS += 1
         m, kp = x.shape
-        if act_scales is None:
-            act_scales = jnp.ones((m, 1), jnp.float32)
         blocks = self._blocks("fused_act_segment_matmul",
                               (m, kp, wp.shape[1]), p, x.dtype, blocks)
+        if in_kernel_scale:
+            # Single-segment fast path: the kernel reduces the per-token
+            # abs-max itself (full-K x block) — no [M, 1] jnp pass.
+            return _pm.fused_act_selfscale_matmul(
+                x, wp, scales, p=p, interpret=self.interpret, **blocks)
+        if act_scales is None:
+            act_scales = jnp.ones((m, 1), jnp.float32)
         return _pm.fused_act_segment_matmul(
             x, act_scales, wp, scales, p=p, interpret=self.interpret,
+            **blocks)
+
+    def qkv_attn_decode(self, q, cache, q_pos, *, window=None, **blocks):
+        """Fused quantized-KV flash-decode (kernels/attn_decode.py): the
+        packed codes and fp16 scales are unpacked/applied inside the
+        attention inner loop, never materialized as a [B,T,Hk,D] fp
+        buffer. Falls back to the jnp oracle for geometry the kernel does
+        not cover (odd head_dim, empty ring, mismatched carrier
+        shapes)."""
+        b, s, hk, g, d = q.shape
+        kc = cache["k_codes"]
+        if d % 2 or kc.ndim != 4 or kc.shape != (b, kc.shape[1], hk, d // 2) \
+                or kc.shape[1] == 0:
+            return _REF.qkv_attn_decode(q, cache, q_pos, window=window)
+        global _QKV_ATTN_CALLS
+        _QKV_ATTN_CALLS += 1
+        t = kc.shape[1]
+        blocks = self._blocks("qkv_attn_decode", (b * hk * s * g, t, d),
+                              4, q.dtype, blocks)
+        return _ad.qkv_attn_decode(
+            q, kc, cache["v_codes"], cache["k_scale"], cache["v_scale"],
+            cache["pos"], q_pos, window=window, interpret=self.interpret,
             **blocks)
 
     def quantize_pack(self, w, scales=None, *, p: int,

@@ -114,7 +114,15 @@ def _static_grid_max(p: int) -> float:
     return 2.0 - 2.0 ** (1 - p)
 
 
-def abs_max_scale(x, axis=None, grid_p=4, eps=1e-6):
+# Floor on any dynamic abs-max before it becomes a divisor: all-zero rows
+# (padding lanes, freshly reset cache slots) must yield a tiny finite
+# scale, never a 0 divisor. The single home of the zero-row guarantee —
+# re-exported (and documented operationally) by ``repro.backend.base`` and
+# shared by the serve KV quantizer and the in-kernel scale prologues.
+ACT_SCALE_EPS = 1e-6
+
+
+def abs_max_scale(x, axis=None, grid_p=4, eps=ACT_SCALE_EPS):
     """Dynamic scale mapping abs-max of x to the top of the 4-bit grid.
 
     stop_gradient'ed: scales are data statistics, not trained (beyond-paper
@@ -125,7 +133,7 @@ def abs_max_scale(x, axis=None, grid_p=4, eps=1e-6):
                                  / _static_grid_max(grid_p))
 
 
-def per_group_weight_scale(w, group_size=16, grid_p=4, eps=1e-6):
+def per_group_weight_scale(w, group_size=16, grid_p=4, eps=ACT_SCALE_EPS):
     """Per-(16-channel K group) scale for a [K, ...] weight."""
     k = w.shape[0]
     wg = jnp.abs(jnp.asarray(w, jnp.float32)).reshape(k // group_size, group_size, -1)

@@ -6,6 +6,7 @@ packed_matmul — mixed 1/2/4-bit packed GEMM (the paper's vmac_Pn) plus the
 quant_pack    — fused SMOL quantize + bit-pack
 noise_inject  — fused Phase-I perturbation with in-kernel PRNG
 fake_quant    — fused clipped-STE quantize-dequantize (QAT forward)
+attn_decode   — fused quantized-KV flash-decode attention (serve)
 
 These modules are the *implementations* behind the ``pallas_interpret`` /
 ``pallas_mosaic`` backends in :mod:`repro.backend`; the hot paths reach
@@ -23,7 +24,8 @@ code should use :mod:`repro.backend` instead of either.
 import warnings as _warnings
 
 from . import ops, prng, ref
-from . import fake_quant, quant_pack          # unshadowed module names
+from . import attn_decode, fake_quant, quant_pack  # unshadowed module names
+from . import attn_decode as attn_decode_mod
 from . import fake_quant as fake_quant_mod
 from . import noise_inject as noise_inject_mod
 from . import packed_matmul as packed_matmul_mod
@@ -41,9 +43,9 @@ del packed_matmul, noise_inject  # noqa: F821
 _DEPRECATED_FUNCS = ("packed_matmul", "packed_segment_matmul",
                      "quantize_pack", "noise_inject")
 
-__all__ = ["ops", "prng", "ref", "fake_quant", "quant_pack",
+__all__ = ["ops", "prng", "ref", "attn_decode", "fake_quant", "quant_pack",
            "packed_matmul_mod", "quant_pack_mod", "noise_inject_mod",
-           "fake_quant_mod"] + list(_DEPRECATED_FUNCS)
+           "fake_quant_mod", "attn_decode_mod"] + list(_DEPRECATED_FUNCS)
 
 
 def __getattr__(name):

@@ -1,0 +1,135 @@
+"""Fused quantized-KV flash-decode attention (serve hot path, DESIGN §12).
+
+One (batch row, kv-head) per program: q [SG, D] (S decode/prefill tokens x
+G grouped query heads) attends over the slot's full ring of T packed
+4-bit K/V entries. The packed codes (2 per byte — ``serve/kv_quant``'s
+carrier convention) and their per-(slot, head) fp16 scales stream through
+VMEM as *bytes*; each ``block_t`` tile is unpacked (shift/mask), affine
+SMOL-dequantized ``v = (2u - 15) * 2^-3`` and scaled **inside the
+attention inner loop** — the [T, D] floating-point K/V tensor never exists
+in HBM (that materialized dequant buffer is exactly what the decode_32k
+cells are bound on).
+
+Two block-tiled passes per program, with an exact softmax between them:
+
+    pass 1   scores[SG, T]  += q @ dequant(k_tile)^T       (per tile)
+    mask     causal-by-position (+ sliding window), pos<0 entries dropped
+    softmax  full-row fp32 (same op order as the jnp oracle)
+    pass 2   out[SG, D]     += softmax_tile @ dequant(v_tile)
+
+VMEM per step at T=32k, D=128, SG=8: codes 2x 32k*64 B = 4 MiB, scores
+8x32k*4 = 1 MiB, one unpacked [block_t, D] f32 tile 128 KiB — the fp32
+score row is the only O(T) fp buffer. Numerics mirror
+``backend.base.qkv_attn_jnp`` element-for-element (dequant, 1/sqrt(D)
+scaling, -1e30 mask fill, fp32 softmax); only the tiled f32 accumulation
+order of pass 2 may differ from the oracle's single contraction, which is
+why the parity bound is "token-identical greedy decode", not bitwise
+logits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30                        # matches models.attention.NEG_INF
+
+
+def _dequant_tile(codes, scale):
+    """[bt, D//2] uint8 codes + [bt, 1] f16 scales -> [bt, D] f32 on the
+    4-bit SMOL grid — the same element ops as ``kv_quant.dequantize_kv``
+    at f32 read dtype (channel 2j in the low nibble, 2j+1 in the high)."""
+    lo = (codes & 0xF).astype(jnp.float32)
+    hi = ((codes >> 4) & 0xF).astype(jnp.float32)
+    u = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0],
+                                             codes.shape[1] * 2)
+    v = (2.0 * u - 15.0) * 0.125
+    return v * scale.astype(jnp.float32)
+
+
+def _kernel(q_ref, kc_ref, vc_ref, ks_ref, vs_ref, kpos_ref, qpos_ref,
+            o_ref, *, g: int, bt: int, window: Optional[int]):
+    sg, d = q_ref.shape[2], q_ref.shape[3]
+    t = kc_ref.shape[2]
+    nb = t // bt
+    q = q_ref[0, 0].astype(jnp.float32)                    # [SG, D]
+
+    def score_tile(i, acc):
+        kc = kc_ref[0, 0, pl.ds(i * bt, bt), :]            # [bt, D//2] u8
+        ks = ks_ref[0, 0, pl.ds(i * bt, bt), :]            # [bt, 1] f16
+        kd = _dequant_tile(kc, ks)                         # [bt, D] f32
+        sc = jax.lax.dot_general(q, kd, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(acc, sc, (0, i * bt))
+
+    scores = jax.lax.fori_loop(0, nb, score_tile,
+                               jnp.zeros((sg, t), jnp.float32))
+    scores = scores * (1.0 / np.sqrt(d))
+    kpos = kpos_ref[...]                                   # [1, T]
+    qpos = jnp.repeat(qpos_ref[...], g, axis=1)            # [1, SG] s-major
+    qcol = qpos.reshape(sg, 1)
+    mask = (qcol >= kpos) & (kpos >= 0)                    # [SG, T]
+    if window is not None:
+        mask &= (qcol - kpos) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)                    # exact, full row
+
+    def out_tile(i, acc):
+        vc = vc_ref[0, 0, pl.ds(i * bt, bt), :]
+        vs = vs_ref[0, 0, pl.ds(i * bt, bt), :]
+        vd = _dequant_tile(vc, vs)                         # [bt, D] f32
+        pt = jax.lax.dynamic_slice(p, (0, i * bt), (sg, bt))
+        return acc + jax.lax.dot(pt, vd,
+                                 preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = jax.lax.fori_loop(0, nb, out_tile,
+                                    jnp.zeros((sg, d), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t",
+                                             "interpret"))
+def qkv_attn_decode(q, k_codes, v_codes, k_scale, v_scale, kv_pos, q_pos,
+                    *, window: Optional[int] = None, block_t: int = 256,
+                    interpret: bool = True):
+    """Fused decode attention over the packed 4-bit ring-KV cache.
+
+    q [B,S,Hk,G,D] (RoPE applied); k_codes/v_codes [B,T,Hk,D//2] uint8;
+    k_scale/v_scale [B,T,Hk,1] f16; kv_pos [B,T] ring positions (< 0 =
+    empty entry); q_pos [B,S] (< 0 = masked lane). -> [B,S,Hk,G,D] f32.
+    """
+    from .packed_matmul import fit_block
+    b, s, hk, g, d = q.shape
+    t = k_codes.shape[1]
+    bt = fit_block(t, block_t)
+    sg = s * g
+    # Head-major relayout: one contiguous (b, h) tile per program. The
+    # transposed operands are *bytes* (codes) and f16 scalars — 4x+ less
+    # traffic than a dequantized fp cache would move.
+    qh = jnp.transpose(q, (0, 2, 1, 3, 4)).reshape(b, hk, sg, d)
+    kc = jnp.swapaxes(k_codes, 1, 2)                       # [B,Hk,T,D//2]
+    vc = jnp.swapaxes(v_codes, 1, 2)
+    ks = jnp.swapaxes(k_scale, 1, 2)                       # [B,Hk,T,1]
+    vs = jnp.swapaxes(v_scale, 1, 2)
+    kern = functools.partial(_kernel, g=g, bt=bt, window=window)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hk),
+        in_specs=[
+            pl.BlockSpec((1, 1, sg, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, d // 2), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, d // 2), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, sg, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hk, sg, d), jnp.float32),
+        interpret=interpret,
+    )(qh, kc, vc, ks, vs,
+      jnp.asarray(kv_pos, jnp.int32), jnp.asarray(q_pos, jnp.int32))
+    return jnp.transpose(out.reshape(b, hk, s, g, d), (0, 2, 1, 3, 4))

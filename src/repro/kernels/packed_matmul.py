@@ -24,6 +24,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.qtypes import GROUP_SIZE
+from repro.core.quant import ACT_SCALE_EPS
+
+_GRID_TOP_4 = 2.0 - 2.0 ** (1 - 4)      # quant._static_grid_max(4) = 1.875
 
 
 def _tpu_compiler_params():
@@ -105,18 +108,48 @@ def _fused_kernel(x_ref, sx_ref, wp_ref, s_ref, o_ref, *, p: int, bk: int,
     _accumulate(xq, wp_ref, s_ref, o_ref, p=p, bk=bk, use_scales=use_scales)
 
 
+def _fused_selfscale_kernel(x_ref, wp_ref, s_ref, o_ref, *, p: int,
+                            bk: int, use_scales: bool):
+    """Single-segment fused GEMM that computes the per-token abs-max scale
+    *in-kernel* (the ROADMAP "in-kernel per-token abs-max" item): the x
+    block spans the FULL K row (its index map pins the K grid dim to 0, so
+    the tile stays resident across K steps), making the [bm, 1] reduction
+    available in the prologue — the last [M, K] -> [M, 1] jnp pass over
+    the activations disappears. Legal only when one uniform-precision
+    segment spans the whole row: a row crossing segment boundaries would
+    need the reduction across kernel invocations (DESIGN.md §11), which is
+    exactly why the multi-segment form keeps the scale in the driver.
+
+    Mirrors ``core.quant.abs_max_scale`` element-for-element (fp32 abs-max
+    over the full row, ``ACT_SCALE_EPS`` clamp, divide by the 4-bit grid
+    top 1.875) so it is bit-exact with the driver-scale form."""
+    x = x_ref[...].astype(jnp.float32)                  # [bm, K] full row
+    m = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # The barrier keeps the compiler from strength-reducing the division
+    # by the constant grid top into a reciprocal multiply (1-ulp off),
+    # which would break bitwise parity with the driver-side act_scale.
+    grid_top = jax.lax.optimization_barrier(jnp.float32(_GRID_TOP_4))
+    sx = jnp.maximum(m, ACT_SCALE_EPS) / grid_top       # [bm, 1]
+    xk = jax.lax.dynamic_slice(x, (0, pl.program_id(2) * bk),
+                               (x.shape[0], bk))
+    xq = (_snap(xk / sx, p) * sx).astype(x_ref.dtype).astype(jnp.float32)
+    _accumulate(xq, wp_ref, s_ref, o_ref, p=p, bk=bk, use_scales=use_scales)
+
+
 def _segment_call(kern, x, wp, s2d, *extra, bm, bn, bk, p, extra_specs=(),
-                  interpret):
+                  interpret, x_spec=None):
     """Shared pallas_call assembly of the segment GEMMs: (M/bm, N/bn,
     Kp/bk) grid with K innermost, x/wp/per-group-scale block specs (any
-    ``extra`` operands slot between x and wp), f32 output."""
+    ``extra`` operands slot between x and wp), f32 output. ``x_spec``
+    overrides the default K-tiled x block (the self-scale kernel pins the
+    full K row instead)."""
     m, kp = x.shape
     n = wp.shape[1]
     return pl.pallas_call(
         kern,
         grid=(m // bm, n // bn, kp // bk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            x_spec or pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             *extra_specs,
             pl.BlockSpec((bk * p // 8, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((bk // GROUP_SIZE, 1), lambda i, j, k: (k, 0)),
@@ -186,3 +219,29 @@ def fused_act_segment_matmul(x, sx, wp, scales, *, p: int,
     return _segment_call(kern, x, wp, s2d, jnp.asarray(sx, jnp.float32),
                          bm=bm, bn=bn, bk=bk, p=p, extra_specs=(sx_spec,),
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p", "block_m", "block_n", "block_k", "interpret"))
+def fused_act_selfscale_matmul(x, wp, scales, *, p: int,
+                               block_m: int = 256, block_n: int = 128,
+                               block_k: int = 256, interpret: bool = True):
+    """Single-segment fused-prologue GEMM with the per-token abs-max scale
+    computed *inside* the kernel: for a uniform-precision layer (one
+    segment spans the whole K row) this removes the remaining [M, K] ->
+    [M, 1] jnp reduction pass — activations are read once, scaled,
+    snapped and multiplied without ever leaving VMEM.
+
+    Bit-exact with ``fused_act_segment_matmul(x, act_scale(x), ...)`` (and
+    therefore with the two-pass reference): the in-kernel reduction runs
+    the same fp32 abs-max / ``ACT_SCALE_EPS`` clamp / grid-top divide as
+    ``core.quant.abs_max_scale``, and the abs-max is row-permutation-
+    invariant so driver-side channel reordering does not perturb it.
+    """
+    bm, bn, bk = _fit_segment_blocks(x, wp, p, block_m, block_n, block_k)
+    use_scales, s2d = _prep_scales(scales, x.shape[1])
+    kern = functools.partial(_fused_selfscale_kernel, p=p, bk=bk,
+                             use_scales=use_scales)
+    x_spec = pl.BlockSpec((bm, x.shape[1]), lambda i, j, k: (i, 0))
+    return _segment_call(kern, x, wp, s2d, bm=bm, bn=bn, bk=bk, p=p,
+                         interpret=interpret, x_spec=x_spec)

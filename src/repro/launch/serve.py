@@ -64,6 +64,10 @@ def main():
                          "pallas_interpret, pallas_mosaic, or the "
                          "'pallas' alias; default: SONIQ_BACKEND env / "
                          "auto-negotiation)")
+    ap.add_argument("--kv-bits", type=int, default=None, choices=[4],
+                    help="quantize the decode KV cache to this many bits "
+                         "(packed 4-bit ring + fused flash-decode, "
+                         "DESIGN.md §12); default: fp cache")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -80,8 +84,11 @@ def main():
                               cache_len=args.cache_len,
                               temperature=args.temperature,
                               prefill_chunk=args.prefill_chunk,
-                              backend=args.backend)
-    print(f"kernel backend: {backend_registry.resolve(args.backend).name}")
+                              backend=args.backend,
+                              kv_bits=args.kv_bits)
+    print(f"kernel backend: {backend_registry.resolve(args.backend).name}"
+          f", kv cache: "
+          f"{'fp' if args.kv_bits is None else f'q{args.kv_bits}'}")
     rng = np.random.default_rng(0)
 
     if args.lockstep:

@@ -201,6 +201,15 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
     S > 1 tokens per row (chunked prefill): all S tokens are scattered into
     the ring, then attended with the causal-by-position mask.
 
+    Cache families (selected by ``lm.init_cache(kv_bits=...)``, detected
+    here by leaf name): the fp ring (``k``/``v``/``pos``) runs the jnp
+    path below; the packed 4-bit ring (``k_codes``/... —
+    ``serve/kv_quant.py``) quantizes the new K/V into the ring and
+    dispatches attention to the kernel backend's ``qkv_attn_decode`` op
+    (a fused flash-decode kernel on Pallas, the dequantize-and-SDPA
+    oracle on ``xla_ref`` — DESIGN.md §12). Both honor the same mask /
+    masked-lane / S>1 / stacked-[L,...] semantics.
+
     cross_kv: optional precomputed (k, v, k_pos) for encoder-decoder cross
     attention (whisper) — used as-is, no cache update.
     """
@@ -218,6 +227,12 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
         if use_rope:
             k_new = apply_rope(k_new, pos_r, rope_theta, mrope_sections)
         stacked = layer_idx is not None
+        if "k_codes" in cache:                   # packed 4-bit ring family
+            return _qkv_attn_decode(params, x, cache, posb, k_new, v_new,
+                                    q, num_heads=num_heads,
+                                    num_kv_heads=num_kv_heads,
+                                    head_dim=head_dim, qcfg=qcfg,
+                                    window=window, layer_idx=layer_idx)
         cache_len = cache["k"].shape[2 if stacked else 1]
         # Masked lanes (pos < 0) scatter out of bounds -> dropped.
         slot = jnp.where(posb >= 0, posb % cache_len, cache_len)
@@ -254,3 +269,34 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
     o = o.reshape(b, s, num_heads * head_dim)
     y = smol.linear_apply(params["wo"], o, qcfg, None)
     return y, new_cache
+
+
+def _qkv_attn_decode(params, x, cache, posb, k_new, v_new, q, *,
+                     num_heads: int, num_kv_heads: int, head_dim: int,
+                     qcfg: QuantConfig, window, layer_idx):
+    """Quantized-ring decode tail of :func:`attn_decode`: quantize + ring-
+    write the new K/V (masked lanes dropped, S>1 chunks, stacked layout —
+    all in ``kv_quant.update_qkv_cache``), then run attention over the
+    packed codes on the kernel backend's ``qkv_attn_decode`` op."""
+    from repro.backend import registry       # lazy: backends import models
+    from repro.serve import kv_quant
+    b, s = x.shape[:2]
+    new_cache = kv_quant.update_qkv_cache(cache, k_new, v_new, posb,
+                                          layer_idx=layer_idx)
+    if layer_idx is None:
+        layer = dict(new_cache)
+        layer["k_codes"] = shard(layer["k_codes"], "batch", "seq_shard",
+                                 None, None)
+        layer["v_codes"] = shard(layer["v_codes"], "batch", "seq_shard",
+                                 None, None)
+        new_cache = layer
+    else:
+        layer = {name: jax.lax.dynamic_index_in_dim(leaf, layer_idx, 0,
+                                                    False)
+                 for name, leaf in new_cache.items()}
+    g = num_heads // num_kv_heads
+    qr = q.reshape(b, s, num_kv_heads, g, head_dim)
+    o = registry.resolve(qcfg.backend_name).qkv_attn_decode(
+        qr, layer, posb, window=window)
+    o = o.reshape(b, s, num_heads * head_dim).astype(x.dtype)
+    return smol.linear_apply(params["wo"], o, qcfg, None), new_cache

@@ -147,18 +147,32 @@ def block_apply(params: Dict, kind: str, x, positions, cfg,
 
 # --------------------------------------------------------------- decode ----
 def block_cache_init(kind: str, cfg, batch: int, cache_len: int,
-                     dtype=jnp.bfloat16, *, specs: bool = False) -> Dict:
+                     dtype=jnp.bfloat16, *, specs: bool = False,
+                     kv_bits: Optional[int] = None) -> Dict:
+    """``kv_bits=None`` allocates the fp ring-KV cache in ``dtype``;
+    ``kv_bits=4`` the packed 4-bit family (``serve/kv_quant.py`` — codes +
+    fp16 scales, consumed by the ``qkv_attn_decode`` backend op). SSM
+    state always stays fp (the recurrent state is the accumulator —
+    DESIGN.md §5)."""
     base = kind.split("@")[0]
     kv = attention.kv_cache_specs if specs else attention.init_kv_cache
     sm = ssm_lib.ssm_cache_specs if specs else ssm_lib.init_ssm_cache
     if base == "hybrid_unit":
         return {f"sub{i}": block_cache_init(sub, cfg, batch, cache_len,
-                                            dtype, specs=specs)
+                                            dtype, specs=specs,
+                                            kv_bits=kv_bits)
                 for i, sub in enumerate(cfg.hybrid_unit_kinds())}
     c: Dict = {}
     if "attn" in base or base == "dec":
         clen = min(cache_len, cfg.window) if cfg.window else cache_len
-        c["kv"] = kv(batch, clen, cfg.num_kv_heads, cfg.hd, dtype)
+        if kv_bits is None:
+            c["kv"] = kv(batch, clen, cfg.num_kv_heads, cfg.hd, dtype)
+        else:
+            assert kv_bits == 4, f"kv_bits must be None or 4, got {kv_bits}"
+            from repro.serve import kv_quant   # lazy: serve imports models
+            qkv = kv_quant.qkv_cache_specs if specs \
+                else kv_quant.init_qkv_cache
+            c["kv"] = qkv(batch, clen, cfg.num_kv_heads, cfg.hd)
     if "mamba" in base:
         c["ssm"] = sm(batch, cfg.d_model, cfg.ssm_state,
                       expand=cfg.ssm_expand, dtype=dtype)

@@ -224,13 +224,20 @@ def _stack_cache(c, count: int, specs: bool):
 
 
 def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
-               enc_len: int = 0, specs: bool = False) -> Dict:
+               enc_len: int = 0, specs: bool = False,
+               kv_bits: Optional[int] = None) -> Dict:
     """Decode cache for the whole model; specs=True returns
-    ShapeDtypeStructs (dry-run, no allocation)."""
+    ShapeDtypeStructs (dry-run, no allocation).
+
+    kv_bits: None keeps the fp ring-KV cache in ``dtype``; 4 selects the
+    packed 4-bit family (``serve/kv_quant.py`` — ~4x fewer K/V payload
+    bytes, attention runs on the ``qkv_attn_decode`` backend op,
+    DESIGN.md §12). Cross-attention K/V (enc-dec) stay fp — they are
+    computed once per request, not ring-written per token."""
     cache: Dict = {"groups": []}
     for kind, count in cfg.layer_plan():
         c1 = blocks.block_cache_init(kind, cfg, batch, cache_len, dtype,
-                                     specs=specs)
+                                     specs=specs, kv_bits=kv_bits)
         cache["groups"].append(_stack_cache(c1, count, specs))
     if cfg.encoder_layers:
         t = enc_len or 1500
@@ -378,7 +385,9 @@ def reset_cache_slots(cache: Dict, slots):
     """Wipe the cache rows of the given batch slots (request admission /
     eviction in the continuous-batching engine). Cache leaves are stacked
     [L, B, ...]: ``pos`` leaves become -1 (ring entries read as empty),
-    K/V/SSM state leaves become 0. Rows not listed are untouched."""
+    K/V/SSM state leaves become 0 — including the quantized family's
+    codes and scales (``kv_quant.reset_slots`` semantics). Rows not
+    listed are untouched."""
     idx = jnp.asarray(slots, jnp.int32)
 
     def fix(path, leaf):

@@ -79,6 +79,13 @@ class EngineConfig:
     # DESIGN.md §11). False pins the two-pass reference; benchmarks flip
     # this to record the fused-vs-unfused delta.
     fuse_act_quant: bool = True
+    # KV-cache precision (DESIGN.md §12). None = fp ring cache in
+    # ``cache_dtype`` (status quo); 4 = packed 4-bit ring cache
+    # (serve/kv_quant.py): ~4x fewer K/V payload bytes, decode attention
+    # runs on the backend's ``qkv_attn_decode`` op (fused flash-decode
+    # kernel on Pallas). Greedy tokens stay engine- and backend-parity at
+    # q4; they differ from kv_bits=None by the pinned KV round-trip error.
+    kv_bits: Optional[int] = None
 
 
 class _PackedEngine:
@@ -111,7 +118,8 @@ class _PackedEngine:
 
     def init_cache(self, batch: int):
         return lm.init_cache(self.cfg, batch, self.ecfg.cache_len,
-                             jnp.dtype(self.ecfg.cache_dtype))
+                             jnp.dtype(self.ecfg.cache_dtype),
+                             kv_bits=self.ecfg.kv_bits)
 
 
 class LockstepEngine(_PackedEngine):

@@ -1,38 +1,64 @@
-"""Quantized KV cache (beyond-paper extension, DESIGN.md §8).
+"""Quantized KV cache (beyond-paper extension, DESIGN.md §8/§12).
 
 K/V live as SMOL 4-bit codes packed 2-per-byte with one fp16-scale per
-(batch, slot, kv-head): cache bytes drop 4x vs bf16 (the decode_32k cells
-are KV-read-bound at large batch). Quantization error matches the W4 grid:
-round-trip RMS error <= 3% of each head's dynamic range (worst-case
-element 3.5% — the half-step bound); on gaussian K/V that is ~10%
-norm-relative, which attention outputs inherit. Tests pin these bounds
-(`tests/test_kv_quant_cluster.py`).
+(batch, slot, kv-head): cache payload bytes drop ~4x vs fp16 (the
+decode_32k cells are KV-read-bound at large batch; ``cache_payload_bytes``
+is the accounting the claim is measured with — ``pos`` bookkeeping is
+identical in both cache families and reported separately). Quantization
+error matches the W4 grid: round-trip RMS error <= 3% of each head's
+dynamic range (worst-case element 3.5% — the half-step bound); on gaussian
+K/V that is ~10% norm-relative, which attention outputs inherit. Tests pin
+these bounds (`tests/test_kv_quant_cluster.py`).
 
-The packed layout matches kernels/packed_matmul's carrier convention, so a
-fused quantized-KV flash-decode Pallas kernel can consume it directly; the
-jnp path here is the oracle.
+The packed layout matches kernels/packed_matmul's carrier convention, so
+the fused quantized-KV flash-decode kernel (``kernels/attn_decode.py``,
+reached through the ``qkv_attn_decode`` backend op — DESIGN.md §12)
+consumes it directly; the jnp path here is the oracle.
+
+Ring-write semantics mirror the fp cache in ``models.attention``
+(DESIGN.md §10): lanes with ``pos < 0`` (idle batch slots, prefill-chunk
+padding) are redirected out of bounds and dropped (``mode="drop"``) so a
+masked lane can never clobber a live ring entry, and ``update_qkv_cache``
+accepts S > 1 token chunks (chunked prefill) plus the stacked ``[L, ...]``
+scan-carry layout via ``layer_idx``.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
+from repro.core.quant import ACT_SCALE_EPS
 
 P_BITS = 4
 GRID_MAX = 2.0 - 2.0 ** (1 - P_BITS)
+_SCALE_MAX = float(np.finfo(np.float16).max)   # fp16 scale saturation
 
 
 def quantize_kv(x) -> Tuple[jax.Array, jax.Array]:
-    """x [B, S, H, D] -> (codes uint8 [B, S, H, D//2], scale f16 [B,S,H,1])."""
+    """x [B, S, H, D] -> (codes uint8 [B, S, H, D//2], scale f16 [B,S,H,1]).
+
+    The abs-max clamp is the shared ``ACT_SCALE_EPS`` floor from
+    ``repro.backend.base`` — the single place the all-zero-row guarantee
+    (a freshly reset slot must never produce a 0 divisor) is pinned.
+
+    Codes are computed against the *stored* scale — clamped into fp16
+    range (heads with abs-max beyond ~1.2e5 saturate to the top of the
+    grid instead of decoding to inf) and rounded through fp16 — so the
+    round-trip error is bounded by the stored scale's half-step, not by a
+    scale the reader never sees.
+    """
     xf = jnp.asarray(x, jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-6) \
-        / GRID_MAX
-    u = quant.quantize_to_int(xf / scale, P_BITS).astype(jnp.uint8)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True),
+                        ACT_SCALE_EPS) / GRID_MAX
+    scale = jnp.minimum(scale, _SCALE_MAX).astype(jnp.float16)
+    u = quant.quantize_to_int(xf / scale.astype(jnp.float32), P_BITS)
+    u = u.astype(jnp.uint8)
     lo, hi = u[..., 0::2], u[..., 1::2]
-    return (lo | (hi << 4)), scale.astype(jnp.float16)
+    return (lo | (hi << 4)), scale
 
 
 def dequantize_kv(codes, scale, dtype=jnp.bfloat16):
@@ -61,22 +87,60 @@ def init_qkv_cache(batch: int, cache_len: int, num_kv_heads: int,
     }
 
 
-def update_qkv_cache(cache: Dict, k_new, v_new, pos) -> Dict:
-    """Write one token (k_new/v_new [B, 1, H, D]) at pos % cache_len."""
+def qkv_cache_specs(batch: int, cache_len: int, num_kv_heads: int,
+                    head_dim: int) -> Dict:
+    """ShapeDtypeStructs of :func:`init_qkv_cache` (dry-run, no
+    allocation) — the quantized counterpart of
+    ``attention.kv_cache_specs``."""
+    assert head_dim % 2 == 0
+    sd = jax.ShapeDtypeStruct
+    return {
+        "k_codes": sd((batch, cache_len, num_kv_heads, head_dim // 2),
+                      jnp.uint8),
+        "v_codes": sd((batch, cache_len, num_kv_heads, head_dim // 2),
+                      jnp.uint8),
+        "k_scale": sd((batch, cache_len, num_kv_heads, 1), jnp.float16),
+        "v_scale": sd((batch, cache_len, num_kv_heads, 1), jnp.float16),
+        "pos": sd((batch, cache_len), jnp.int32),
+    }
+
+
+def update_qkv_cache(cache: Dict, k_new, v_new, pos, *,
+                     layer_idx: Optional[int] = None) -> Dict:
+    """Quantize + ring-write a chunk of new K/V (k_new/v_new [B, S, H, D])
+    at slot ``pos % cache_len``.
+
+    ``pos`` is [B] or [B, S] absolute positions; lanes with ``pos < 0``
+    (idle batch slot / prefill-chunk padding) are redirected out of bounds
+    and dropped (``mode="drop"``) exactly like the fp ring write in
+    ``models.attention.attn_decode`` — a masked lane never clobbers a live
+    ring entry and never stamps its ``pos`` over a resident one.
+
+    ``layer_idx``: when given, cache leaves are the stacked ``[L, ...]``
+    scan-carry buffers and the scatter happens in place at
+    ``[layer_idx, b, slot]`` (one token-chunk's bytes).
+    """
     b = k_new.shape[0]
-    cache_len = cache["k_codes"].shape[1]
-    posb = pos[:, None] if pos.ndim == 1 else pos
-    slot = (posb % cache_len).astype(jnp.int32)
+    stacked = layer_idx is not None
+    cache_len = cache["k_codes"].shape[2 if stacked else 1]
+    posb = pos[:, None] if pos.ndim == 1 else pos            # [B, S]
+    # Masked lanes (pos < 0) scatter out of bounds -> dropped.
+    slot = jnp.where(posb >= 0, posb % cache_len, cache_len)
+    slot = slot.astype(jnp.int32)
     bidx = jnp.arange(b)[:, None]
     kc, ks = quantize_kv(k_new)
     vc, vs = quantize_kv(v_new)
-    return {
-        "k_codes": cache["k_codes"].at[bidx, slot].set(kc),
-        "v_codes": cache["v_codes"].at[bidx, slot].set(vc),
-        "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
-        "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
-        "pos": cache["pos"].at[bidx, slot].set(posb),
-    }
+    new = {"k_codes": kc, "v_codes": vc, "k_scale": ks, "v_scale": vs,
+           "pos": posb}
+
+    def write(name, val):
+        leaf = cache[name]
+        val = val.astype(leaf.dtype)
+        if stacked:
+            return leaf.at[layer_idx, bidx, slot].set(val, mode="drop")
+        return leaf.at[bidx, slot].set(val, mode="drop")
+
+    return {name: write(name, val) for name, val in new.items()}
 
 
 def read_qkv_cache(cache: Dict, dtype=jnp.bfloat16):
@@ -86,8 +150,54 @@ def read_qkv_cache(cache: Dict, dtype=jnp.bfloat16):
     return k, v, cache["pos"]
 
 
-def cache_bytes(cache: Dict) -> int:
-    return sum(v.size * v.dtype.itemsize for v in cache.values())
+# ------------------------------------------------- byte accounting ----
+# The "4x cache bytes" claim compares the *ring K/V payload* only: the
+# quantized family's codes + scales vs the fp family's k/v buffers.
+# ``pos`` is scheduler bookkeeping carried identically by both families;
+# SSM state and cross-attention K/V (named k/v too, but under a "cross"
+# subtree) never quantize and are excluded from both sides of the ratio.
+_KV_PAYLOAD_LEAVES = frozenset({"k", "v", "k_codes", "v_codes",
+                                "k_scale", "v_scale"})
+_META_LEAVES = frozenset({"pos"})
+
+
+def _leaf_bytes(v) -> int:
+    """Bytes of an array or ShapeDtypeStruct (specs=True dry-run trees)."""
+    return int(np.prod(v.shape, dtype=np.int64)) * np.dtype(v.dtype).itemsize
+
+
+def _ring_kv_leaves(cache, names):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if leaf is None:
+            continue
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if keys[-1] in names and "cross" not in keys:
+            yield leaf
+
+
+def cache_payload_bytes(cache) -> int:
+    """Ring K/V payload bytes of a cache (py)tree: packed codes + scales
+    for the quantized family, k/v buffers for the fp family. Works on a
+    single-layer cache dict, the full stacked ``lm.init_cache`` tree
+    (SSM/cross-attention leaves are not ring K/V and don't count), and
+    ``specs=True`` trees."""
+    return sum(_leaf_bytes(v)
+               for v in _ring_kv_leaves(cache, _KV_PAYLOAD_LEAVES))
+
+
+def cache_meta_bytes(cache) -> int:
+    """Bytes of the ring ``pos`` metadata (reported separately from the
+    payload so the compression claim stays honest)."""
+    return sum(_leaf_bytes(v) for v in _ring_kv_leaves(cache, _META_LEAVES))
+
+
+def cache_bytes(cache) -> int:
+    """Total bytes of every leaf in the cache tree (payload, metadata,
+    and any non-KV state such as SSM carries or cross-attention K/V)."""
+    return sum(
+        _leaf_bytes(leaf)
+        for _path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]
+        if leaf is not None)
 
 
 # ------------------------------------------------- slot management ----

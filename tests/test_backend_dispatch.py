@@ -41,6 +41,43 @@ def _serve_leaf(k=256, n=128, key=0):
     return transforms.pack_linear(params, qcfg), qcfg
 
 
+def test_single_segment_routes_in_kernel_scale(monkeypatch):
+    """The shared driver hands the per-token abs-max to the kernel
+    (``in_kernel_scale=True``) exactly when one uniform-precision segment
+    spans the whole K row under per_token scaling — never for mixed
+    segment layouts or non-per-token modes (the scale then spans kernel
+    boundaries / isn't a row reduction)."""
+    from repro.api import transforms
+    b = resolve("pallas_interpret")
+    seen = []
+    orig = type(b).fused_act_segment_matmul     # pre-patch, via the MRO
+
+    def spy(self, x, wp, scales=None, act_scales=None, *,
+            in_kernel_scale=False, **kw):
+        seen.append(in_kernel_scale)
+        return orig(self, x, wp, scales, act_scales,
+                    in_kernel_scale=in_kernel_scale, **kw)
+
+    monkeypatch.setattr(type(b), "fused_act_segment_matmul", spy)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 64))
+    qat = QuantConfig(mode="qat")
+    uni = transforms.pack_linear(
+        {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 32)),
+         "pbits": np.full((4,), 4, np.int8)}, qat)
+    mixed = transforms.pack_linear(
+        {"w": jax.random.normal(jax.random.PRNGKey(2), (64, 32)),
+         "pbits": np.asarray([4, 4, 2, 1], np.int8)}, qat)
+    for sp, mode, want in ((uni, "per_token", [True]),
+                           (uni, "per_tensor", [False]),
+                           (uni, "none", [False]),
+                           (mixed, "per_token", [False] * 3)):
+        seen.clear()
+        y = b.packed_matmul(sp, x, QuantConfig(mode="serve",
+                                               act_scale_mode=mode))
+        assert seen == want, (mode, seen)
+        assert np.isfinite(np.asarray(y)).all()
+
+
 # ---------------------------------------------------------- registry ----
 def test_builtin_backends_registered():
     assert {"xla_ref", "pallas_interpret", "pallas_mosaic"} <= set(
@@ -95,7 +132,8 @@ def test_supports_capability_probe():
     assert set(autotune.DEFAULT_BLOCKS) <= set(OPS)
     pal = resolve("pallas_interpret")
     for op in ("packed_segment_matmul", "fused_act_segment_matmul",
-               "quantize_pack", "noise_inject", "fake_quant"):
+               "quantize_pack", "noise_inject", "fake_quant",
+               "qkv_attn_decode"):
         assert pal.supports(op), op          # own Pallas kernels
     assert not pal.supports("packed_matmul")  # shared driver
     xla = resolve("xla_ref")
@@ -103,8 +141,10 @@ def test_supports_capability_probe():
     assert not xla.supports("noise_inject")  # shared hash implementation
     assert not xla.supports("fake_quant")    # shared STE implementation
     # xla_ref must stay on the two-pass activation-quant form — it is the
-    # exactness oracle the fused Pallas prologue is gated against.
+    # exactness oracle the fused Pallas prologue is gated against; same
+    # for the dequantize-everything quantized-KV decode oracle.
     assert not xla.supports("fused_act_segment_matmul")
+    assert not xla.supports("qkv_attn_decode")
 
 
 def test_pallas_alias_negotiates():

@@ -74,6 +74,51 @@ def test_fused_prologue_equals_two_pass_bit_exact(case):
 
 
 @st.composite
+def _selfscale_cases(draw):
+    ngroups = draw(st.integers(1, 8))
+    k = 16 * ngroups
+    p = draw(st.sampled_from([4, 2, 1]))     # uniform precision: 1 segment
+    m = draw(st.integers(1, 6))
+    n = draw(st.sampled_from([8, 32]))
+    seed = draw(st.integers(0, 2 ** 16))
+    zero_row = draw(st.booleans())
+    outlier_row = draw(st.booleans())
+    return p, k, m, n, seed, zero_row, outlier_row
+
+
+@settings(max_examples=25, deadline=None)
+@given(_selfscale_cases())
+def test_in_kernel_selfscale_equals_driver_scale_bit_exact(case):
+    """ROADMAP satellite: for a uniform-precision (single-segment) layer
+    the per-token abs-max moves into the fused kernel's prologue
+    (``in_kernel_scale=True``). It must equal the driver-scale fused form
+    — and therefore the two-pass reference — bit-exactly, zero rows
+    (ACT_SCALE_EPS clamp) and outliers included."""
+    p, k, m, n, seed, zero_row, outlier_row = case
+    sp = _packed_leaf([p] * (k // 16), k, n, seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k)) * 1.5
+    if zero_row:
+        x = x.at[0].set(0.0)
+    if outlier_row:
+        x = x.at[m - 1].multiply(100.0)
+    from repro.backend.base import act_scale
+    b = resolve("pallas_interpret")
+    name = {4: "w4", 2: "w2", 1: "w1"}[p]
+    wp = sp[name]
+    scales = sp.get("wscale")
+    sx = jnp.broadcast_to(act_scale(x, "per_token").reshape(-1, 1), (m, 1))
+    y_self = np.asarray(b.fused_act_segment_matmul(
+        x, wp, scales, None, p=p, in_kernel_scale=True))
+    y_driver = np.asarray(b.fused_act_segment_matmul(
+        x, wp, scales, sx, p=p))
+    y_two = np.asarray(resolve("xla_ref").fused_act_segment_matmul(
+        x, wp, scales, None, p=p, in_kernel_scale=True))
+    np.testing.assert_array_equal(y_self, y_driver)
+    np.testing.assert_array_equal(y_self, y_two)
+    assert np.isfinite(y_self).all()
+
+
+@st.composite
 def _fake_quant_cases(draw):
     ngroups = draw(st.integers(1, 8))
     pbits = draw(st.lists(st.sampled_from([4, 2, 1]),

@@ -47,6 +47,10 @@ DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
     # Quantized-KV flash decode: shape key is (query rows B*Hk*S*G, ring
     # length T, head_dim D); block_t tiles the ring inner loop.
     "qkv_attn_decode": {"block_t": 256},
+    # Paged flash decode: shape key is (query rows B*Hk*S*G, table length
+    # NP, page_size, head_dim D); block_t tiles *within* a page, so it is
+    # snapped to a divisor of page_size.
+    "qkv_attn_decode_paged": {"block_t": 128},
 }
 
 _CACHE: Optional[Dict[str, Dict]] = None
@@ -168,6 +172,10 @@ def candidates_for(op: str, shape: Sequence[int]) -> List[Dict[str, int]]:
         _m, t, _d = shape
         return [{"block_t": bt}
                 for bt in _divisor_candidates(t, 1, (128, 256, 512, 1024))]
+    if op == "qkv_attn_decode_paged":
+        _m, _np, ps, _d = shape
+        return [{"block_t": bt}
+                for bt in _divisor_candidates(ps, 1, (8, 16, 32, 64, 128))]
     k, n = shape
     return [{"block_k": bk, "block_n": bn}
             for bk in _divisor_candidates(k, GROUP_SIZE, (128, 256, 512))

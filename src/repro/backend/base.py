@@ -1,6 +1,6 @@
 """The kernel-backend protocol (DESIGN.md §11).
 
-A :class:`Backend` owns the implementations of the seven SONIQ hot-path
+A :class:`Backend` owns the implementations of the eight SONIQ hot-path
 ops — the operations every lifecycle phase's forward rule is built from:
 
     packed_segment_matmul   x @ unpack_dequant(wp) for one uniform-p segment
@@ -12,6 +12,8 @@ ops — the operations every lifecycle phase's forward rule is built from:
     fake_quant              straight-through quantize-dequantize (QAT)
     qkv_attn_decode         decode attention over the packed 4-bit ring-KV
                             cache (serve fast path, DESIGN.md §12)
+    qkv_attn_decode_paged   the same attention over the paged block-pool
+                            cache (page-table walk, DESIGN.md §13)
 
 Backends register with :mod:`repro.backend.registry`; the phase rules in
 ``repro.core.smol`` resolve one at trace time (``QuantConfig.backend`` /
@@ -50,7 +52,8 @@ from repro.core.qtypes import GROUP_SIZE
 # The op vocabulary of the protocol (capability negotiation keys).
 OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
                         "fused_act_segment_matmul", "quantize_pack",
-                        "noise_inject", "fake_quant", "qkv_attn_decode")
+                        "noise_inject", "fake_quant", "qkv_attn_decode",
+                        "qkv_attn_decode_paged")
 
 # Where each op's backend-specific implementation actually lives (defaults
 # to the op name itself): noise_inject's and fake_quant's public entry
@@ -323,6 +326,26 @@ class Backend:
         del blocks                     # block shapes are a kernel concern
         from repro.serve import kv_quant   # lazy: serve imports backend
         k, v, k_pos = kv_quant.read_qkv_cache(cache, jnp.float32)
+        return qkv_attn_jnp(q, k, v, k_pos, q_pos, window)
+
+    def qkv_attn_decode_paged(self, q, cache: Dict, q_pos, *,
+                              window: Optional[int] = None, **blocks):
+        """Decode attention over one layer's *paged* KV cache (DESIGN.md
+        §13). Same contract as :meth:`qkv_attn_decode` except the cache is
+        a ``serve/kv_pool.py`` paged dict: pool-shaped payload leaves
+        (q4 codes/scales or fp k/v, ``[P, page_size, Hk, ...]``), pool
+        ``pos [P, page_size]`` stamps and per-slot ``page_table [B, NP]``
+        (-1 / null page 0 = unmapped hole). Returns [B,S,Hk,G,D] fp32.
+
+        The base implementation is the gather oracle — ``jnp.take`` each
+        slot's pages into a dense [B, NP*page_size, ...] ring view, then
+        the same masked SDPA — which is what ``xla_ref`` runs. Backends
+        with a real paged kernel walk the page table tile-by-tile with an
+        online softmax instead (no dense gather, no [SG, T] score row);
+        parity is the same token-identical-greedy bound as the ring op."""
+        del blocks
+        from repro.serve import kv_pool    # lazy: serve imports backend
+        k, v, k_pos = kv_pool.gather_paged(cache, jnp.float32)
         return qkv_attn_jnp(q, k, v, k_pos, q_pos, window)
 
     def noise_inject(self, w, s, seed, *, group_size: int = GROUP_SIZE,

@@ -51,6 +51,7 @@ from .xla_ref import XLA_REF as _REF   # per-call geometry fallback
 _FUSED_ACT_CALLS = 0
 _FAKE_QUANT_KERNEL_CALLS = 0
 _QKV_ATTN_CALLS = 0
+_QKV_PAGED_CALLS = 0
 
 
 def fused_act_call_count() -> int:
@@ -71,6 +72,14 @@ def qkv_attn_call_count() -> int:
     counted at trace time; CI's pallas_interpret leg asserts the q4 serve
     path actually engaged the kernel (DESIGN.md §12)."""
     return _QKV_ATTN_CALLS
+
+
+def qkv_attn_paged_call_count() -> int:
+    """How many times a Pallas backend dispatched the paged flash-decode
+    kernel (page-table walk + online softmax, DESIGN.md §13) vs the dense
+    gather oracle — counted at trace time; CI's paged leg asserts the
+    paged serve path actually engaged the kernel, not the fallback."""
+    return _QKV_PAGED_CALLS
 
 
 class PallasBackend(Backend):
@@ -146,6 +155,32 @@ class PallasBackend(Backend):
             q, kc, cache["v_codes"], cache["k_scale"], cache["v_scale"],
             cache["pos"], q_pos, window=window, interpret=self.interpret,
             **blocks)
+
+    def qkv_attn_decode_paged(self, q, cache, q_pos, *, window=None,
+                              **blocks):
+        """Paged flash-decode (kernels/attn_decode.py): walks the slot's
+        page table over the global pool with an online softmax — no dense
+        gather, no [SG, T] score row. The kernel covers the packed-q4
+        pool; the fp paged family and geometry the kernel cannot express
+        (odd head_dim, empty pool) fall back to the gather oracle."""
+        b, s, hk, g, d = q.shape
+        kc = cache.get("k_codes")
+        npg = cache["page_table"].shape[-1]
+        if kc is None or d % 2 or kc.ndim != 4 \
+                or kc.shape[2:] != (hk, d // 2) or kc.shape[0] == 0 \
+                or kc.shape[1] == 0:
+            return _REF.qkv_attn_decode_paged(q, cache, q_pos,
+                                              window=window)
+        global _QKV_PAGED_CALLS
+        _QKV_PAGED_CALLS += 1
+        npages, ps = kc.shape[0], kc.shape[1]
+        blocks = self._blocks("qkv_attn_decode_paged",
+                              (b * hk * s * g, npg, ps, d), 4, q.dtype,
+                              blocks)
+        return _ad.qkv_attn_decode_paged(
+            q, kc, cache["v_codes"], cache["k_scale"], cache["v_scale"],
+            cache["pos"], cache["page_table"], q_pos, window=window,
+            interpret=self.interpret, **blocks)
 
     def quantize_pack(self, w, scales=None, *, p: int,
                       group_size: int = GROUP_SIZE, **blocks):

@@ -133,3 +133,116 @@ def qkv_attn_decode(q, k_codes, v_codes, k_scale, v_scale, kv_pos, q_pos,
     )(qh, kc, vc, ks, vs,
       jnp.asarray(kv_pos, jnp.int32), jnp.asarray(q_pos, jnp.int32))
     return jnp.transpose(out.reshape(b, hk, s, g, d), (0, 2, 1, 3, 4))
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: page-table walk + online softmax (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+# Same per-program shape as the ring kernel — one (batch row, kv-head) per
+# program, q [SG, D] — but K/V live in the global page pool ([P, ps, ...]
+# flattened to a [P*ps, ...] byte stream) and the program walks the slot's
+# page table: tile i covers logical page i // ntile, whose physical page id
+# comes from the table (unmapped ids clamp to the null page 0, whose
+# ``pos`` stamps are -1, so holes mask out exactly like empty ring
+# entries). The softmax is *online* (flash-decode): a running (m, l, acc)
+# carry replaces the ring kernel's full [SG, T] fp32 score row — the only
+# O(T) state left is the carry, so T can grow with the pool, not with a
+# per-slot score buffer. An all-masked tile contributes exp(0) = 1 weights
+# at m = -1e30; the first real tile's rescale exp(-1e30 - m_real) = 0
+# flushes them, and a row that stays fully masked divides to the uniform
+# average — exactly what the oracle's softmax over an all--1e30 row gives.
+
+def _paged_kernel(q_ref, kc_ref, vc_ref, ks_ref, vs_ref, pos_ref, tbl_ref,
+                  qpos_ref, o_ref, *, g: int, ps: int, bt: int,
+                  window: Optional[int]):
+    sg, d = q_ref.shape[2], q_ref.shape[3]
+    npg = tbl_ref.shape[1]
+    ntile = ps // bt
+    q = q_ref[0, 0].astype(jnp.float32)                    # [SG, D]
+    qpos = jnp.repeat(qpos_ref[...], g, axis=1)            # [1, SG] s-major
+    qcol = qpos.reshape(sg, 1)
+
+    def tile(i, carry):
+        m, l, acc = carry
+        pid = tbl_ref[0, i // ntile]                       # traced scalar
+        base = jnp.maximum(pid, 0) * ps + (i % ntile) * bt
+        kc = kc_ref[0, pl.ds(base, bt), :]                 # [bt, D//2] u8
+        ks = ks_ref[0, pl.ds(base, bt), :]                 # [bt, 1] f16
+        kd = _dequant_tile(kc, ks)                         # [bt, D] f32
+        sc = jax.lax.dot_general(q, kd, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        sc = sc * (1.0 / np.sqrt(d))
+        kpos = pos_ref[0, pl.ds(base, bt)].reshape(1, bt)
+        mask = (qcol >= kpos) & (kpos >= 0) & (pid >= 0)   # [SG, bt]
+        if window is not None:
+            mask &= (qcol - kpos) < window
+        sc = jnp.where(mask, sc, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m2)                            # [SG, 1]
+        p = jnp.exp(sc - m2)                               # [SG, bt]
+        vc = vc_ref[0, pl.ds(base, bt), :]
+        vs = vs_ref[0, pl.ds(base, bt), :]
+        vd = _dequant_tile(vc, vs)                         # [bt, D] f32
+        l2 = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc2 = acc * alpha + jax.lax.dot(
+            p, vd, preferred_element_type=jnp.float32)
+        return m2, l2, acc2
+
+    m0 = jnp.full((sg, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((sg, 1), jnp.float32)
+    a0 = jnp.zeros((sg, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, npg * ntile, tile, (m0, l0, a0))
+    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t",
+                                             "interpret"))
+def qkv_attn_decode_paged(q, k_codes, v_codes, k_scale, v_scale, pool_pos,
+                          page_table, q_pos, *,
+                          window: Optional[int] = None, block_t: int = 128,
+                          interpret: bool = True):
+    """Paged flash-decode attention over the packed 4-bit page pool.
+
+    q [B,S,Hk,G,D] (RoPE applied); k_codes/v_codes [P,ps,Hk,D//2] uint8
+    pool pages; k_scale/v_scale [P,ps,Hk,1] f16; pool_pos [P,ps] absolute
+    position stamps (< 0 = empty); page_table [B,NP] physical page per
+    logical page (< 0 = unmapped); q_pos [B,S] (< 0 = masked lane).
+    -> [B,S,Hk,G,D] f32. ``block_t`` tiles *within* a page (clipped to a
+    divisor of ``page_size``); pages are already the natural tile."""
+    from .packed_matmul import fit_block
+    b, s, hk, g, d = q.shape
+    npages, ps = pool_pos.shape
+    npg = page_table.shape[1]
+    bt = fit_block(ps, block_t)
+    sg = s * g
+    # Head-major byte streams over the whole pool: [P, ps, Hk, c] ->
+    # [Hk, P*ps, c]. Pool operands carry no batch dim — every program of a
+    # batch row reads the same stream through its own page table.
+    def pool_stream(x):
+        return jnp.transpose(x, (2, 0, 1, 3)).reshape(
+            x.shape[2], npages * ps, x.shape[3])
+    qh = jnp.transpose(q, (0, 2, 1, 3, 4)).reshape(b, hk, sg, d)
+    kc, vc = pool_stream(k_codes), pool_stream(v_codes)
+    ks, vs = pool_stream(k_scale), pool_stream(v_scale)
+    pos = jnp.asarray(pool_pos, jnp.int32).reshape(1, npages * ps)
+    kern = functools.partial(_paged_kernel, g=g, ps=ps, bt=bt,
+                             window=window)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hk),
+        in_specs=[
+            pl.BlockSpec((1, 1, sg, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, npages * ps, d // 2), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, npages * ps, d // 2), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, npages * ps, 1), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, npages * ps, 1), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, npages * ps), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, npg), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, sg, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hk, sg, d), jnp.float32),
+        interpret=interpret,
+    )(qh, kc, vc, ks, vs, pos,
+      jnp.asarray(page_table, jnp.int32), jnp.asarray(q_pos, jnp.int32))
+    return jnp.transpose(out.reshape(b, hk, s, g, d), (0, 2, 1, 3, 4))

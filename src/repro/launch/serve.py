@@ -68,6 +68,15 @@ def main():
                     help="quantize the decode KV cache to this many bits "
                          "(packed 4-bit ring + fused flash-decode, "
                          "DESIGN.md §12); default: fp cache")
+    ap.add_argument("--kv-layout", default="ring",
+                    choices=["ring", "paged"],
+                    help="KV cache layout: contiguous per-slot ring "
+                         "buffers, or the paged block-pool with "
+                         "copy-on-write prefix sharing (DESIGN.md §13; "
+                         "continuous engine only)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout; must divide "
+                         "the effective cache length)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -85,10 +94,15 @@ def main():
                               temperature=args.temperature,
                               prefill_chunk=args.prefill_chunk,
                               backend=args.backend,
-                              kv_bits=args.kv_bits)
+                              kv_bits=args.kv_bits,
+                              kv_layout=args.kv_layout,
+                              page_size=args.page_size)
     print(f"kernel backend: {backend_registry.resolve(args.backend).name}"
           f", kv cache: "
-          f"{'fp' if args.kv_bits is None else f'q{args.kv_bits}'}")
+          f"{'fp' if args.kv_bits is None else f'q{args.kv_bits}'}"
+          f", layout: {args.kv_layout}"
+          + (f" (page_size {args.page_size})"
+             if args.kv_layout == "paged" else ""))
     rng = np.random.default_rng(0)
 
     if args.lockstep:
@@ -124,6 +138,13 @@ def main():
     print(f"[continuous] {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s, {eng.sched.step_count} engine "
           f"steps, max_batch {args.max_batch})")
+    if args.kv_layout == "paged":
+        st = eng.paged_kv_stats()
+        print(f"[paged-kv] {st['num_pages']} pages x {st['page_size']} "
+              f"tokens, peak resident {st['peak_resident_pages']} pages "
+              f"({st['peak_resident_payload_bytes']:,} payload bytes of "
+              f"{st['reserved_payload_bytes']:,} reserved), prefix hit "
+              f"rate {st['prefix_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -227,6 +227,12 @@ def attn_decode(params, x, cache: Dict, pos, *, num_heads: int,
         if use_rope:
             k_new = apply_rope(k_new, pos_r, rope_theta, mrope_sections)
         stacked = layer_idx is not None
+        if "page_table" in cache:                # paged block-pool family
+            return _paged_attn_decode(params, x, cache, posb, k_new, v_new,
+                                      q, num_heads=num_heads,
+                                      num_kv_heads=num_kv_heads,
+                                      head_dim=head_dim, qcfg=qcfg,
+                                      window=window, layer_idx=layer_idx)
         if "k_codes" in cache:                   # packed 4-bit ring family
             return _qkv_attn_decode(params, x, cache, posb, k_new, v_new,
                                     q, num_heads=num_heads,
@@ -297,6 +303,35 @@ def _qkv_attn_decode(params, x, cache, posb, k_new, v_new, q, *,
     g = num_heads // num_kv_heads
     qr = q.reshape(b, s, num_kv_heads, g, head_dim)
     o = registry.resolve(qcfg.backend_name).qkv_attn_decode(
+        qr, layer, posb, window=window)
+    o = o.reshape(b, s, num_heads * head_dim).astype(x.dtype)
+    return smol.linear_apply(params["wo"], o, qcfg, None), new_cache
+
+
+def _paged_attn_decode(params, x, cache, posb, k_new, v_new, q, *,
+                       num_heads: int, num_kv_heads: int, head_dim: int,
+                       qcfg: QuantConfig, window, layer_idx):
+    """Paged decode tail of :func:`attn_decode` (serve/kv_pool.py,
+    DESIGN.md §13): write the new K/V into the pages the table maps for
+    these positions (masked lanes and unmapped holes dropped — the host
+    allocator has already made every written page private), then run
+    attention through the backend's ``qkv_attn_decode_paged`` op (the
+    page-table-walking flash kernel on Pallas for the packed-q4 pool, the
+    gather oracle on ``xla_ref`` and for the fp pool)."""
+    from repro.backend import registry       # lazy: backends import models
+    from repro.serve import kv_pool
+    b, s = x.shape[:2]
+    new_cache = kv_pool.update_paged_cache(cache, k_new, v_new, posb,
+                                           layer_idx=layer_idx)
+    if layer_idx is None:
+        layer = new_cache
+    else:
+        layer = {name: jax.lax.dynamic_index_in_dim(leaf, layer_idx, 0,
+                                                    False)
+                 for name, leaf in new_cache.items()}
+    g = num_heads // num_kv_heads
+    qr = q.reshape(b, s, num_kv_heads, g, head_dim)
+    o = registry.resolve(qcfg.backend_name).qkv_attn_decode_paged(
         qr, layer, posb, window=window)
     o = o.reshape(b, s, num_heads * head_dim).astype(x.dtype)
     return smol.linear_apply(params["wo"], o, qcfg, None), new_cache

@@ -148,27 +148,56 @@ def block_apply(params: Dict, kind: str, x, positions, cfg,
 # --------------------------------------------------------------- decode ----
 def block_cache_init(kind: str, cfg, batch: int, cache_len: int,
                      dtype=jnp.bfloat16, *, specs: bool = False,
-                     kv_bits: Optional[int] = None) -> Dict:
+                     kv_bits: Optional[int] = None,
+                     kv_layout: str = "ring", page_size: int = 16,
+                     num_pages: Optional[int] = None) -> Dict:
     """``kv_bits=None`` allocates the fp ring-KV cache in ``dtype``;
     ``kv_bits=4`` the packed 4-bit family (``serve/kv_quant.py`` — codes +
     fp16 scales, consumed by the ``qkv_attn_decode`` backend op). SSM
     state always stays fp (the recurrent state is the accumulator —
-    DESIGN.md §5)."""
+    DESIGN.md §5).
+
+    ``kv_layout="paged"`` swaps the per-slot ring for the page-pool layout
+    (``serve/kv_pool.py``, DESIGN.md §13): payload lives in ``num_pages``
+    pool pages of ``page_size`` tokens (page 0 reserved as the null page;
+    ``None`` sizes the pool to full per-slot residency,
+    ``batch * pages_per_seq + 1``) plus a per-slot page table whose
+    logical length is the ring length in pages — ``page_size`` must divide
+    the effective ring length so rollover wraps at the same token the ring
+    layout would."""
     base = kind.split("@")[0]
     kv = attention.kv_cache_specs if specs else attention.init_kv_cache
     sm = ssm_lib.ssm_cache_specs if specs else ssm_lib.init_ssm_cache
     if base == "hybrid_unit":
         return {f"sub{i}": block_cache_init(sub, cfg, batch, cache_len,
                                             dtype, specs=specs,
-                                            kv_bits=kv_bits)
+                                            kv_bits=kv_bits,
+                                            kv_layout=kv_layout,
+                                            page_size=page_size,
+                                            num_pages=num_pages)
                 for i, sub in enumerate(cfg.hybrid_unit_kinds())}
     c: Dict = {}
     if "attn" in base or base == "dec":
         clen = min(cache_len, cfg.window) if cfg.window else cache_len
-        if kv_bits is None:
+        if kv_bits is not None:
+            assert kv_bits == 4, f"kv_bits must be None or 4, got {kv_bits}"
+        if kv_layout == "paged":
+            from repro.serve import kv_pool    # lazy: serve imports models
+            assert clen % page_size == 0, \
+                (f"page_size {page_size} must divide the effective ring "
+                 f"length {clen} (cache_len clipped to the window) so "
+                 f"paged rollover wraps where the ring does")
+            pps = clen // page_size
+            npages = num_pages if num_pages is not None \
+                else batch * pps + 1
+            pkv = kv_pool.paged_cache_specs if specs \
+                else kv_pool.init_paged_cache
+            c["kv"] = pkv(npages, page_size, pps, batch,
+                          cfg.num_kv_heads, cfg.hd, kv_bits=kv_bits,
+                          dtype=dtype)
+        elif kv_bits is None:
             c["kv"] = kv(batch, clen, cfg.num_kv_heads, cfg.hd, dtype)
         else:
-            assert kv_bits == 4, f"kv_bits must be None or 4, got {kv_bits}"
             from repro.serve import kv_quant   # lazy: serve imports models
             qkv = kv_quant.qkv_cache_specs if specs \
                 else kv_quant.init_qkv_cache

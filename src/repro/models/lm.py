@@ -225,7 +225,9 @@ def _stack_cache(c, count: int, specs: bool):
 
 def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
                enc_len: int = 0, specs: bool = False,
-               kv_bits: Optional[int] = None) -> Dict:
+               kv_bits: Optional[int] = None, kv_layout: str = "ring",
+               page_size: int = 16,
+               num_pages: Optional[int] = None) -> Dict:
     """Decode cache for the whole model; specs=True returns
     ShapeDtypeStructs (dry-run, no allocation).
 
@@ -233,11 +235,21 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, *,
     packed 4-bit family (``serve/kv_quant.py`` — ~4x fewer K/V payload
     bytes, attention runs on the ``qkv_attn_decode`` backend op,
     DESIGN.md §12). Cross-attention K/V (enc-dec) stay fp — they are
-    computed once per request, not ring-written per token."""
+    computed once per request, not ring-written per token.
+
+    kv_layout: "ring" keeps per-slot ring buffers; "paged" swaps in the
+    page-pool layout (``serve/kv_pool.py``, DESIGN.md §13 — ``num_pages``
+    pool pages of ``page_size`` tokens shared across slots through
+    per-slot page tables; attention runs on ``qkv_attn_decode_paged``).
+    The paged layout needs the engine's host-side ``PagePool`` to drive
+    allocation — it is a serve-path layout, not a training one."""
     cache: Dict = {"groups": []}
     for kind, count in cfg.layer_plan():
         c1 = blocks.block_cache_init(kind, cfg, batch, cache_len, dtype,
-                                     specs=specs, kv_bits=kv_bits)
+                                     specs=specs, kv_bits=kv_bits,
+                                     kv_layout=kv_layout,
+                                     page_size=page_size,
+                                     num_pages=num_pages)
         cache["groups"].append(_stack_cache(c1, count, specs))
     if cfg.encoder_layers:
         t = enc_len or 1500
@@ -383,17 +395,39 @@ def prefill_step(params, cfg, cache: Dict, tokens, pos, last_idx, *,
 
 def reset_cache_slots(cache: Dict, slots):
     """Wipe the cache rows of the given batch slots (request admission /
-    eviction in the continuous-batching engine). Cache leaves are stacked
-    [L, B, ...]: ``pos`` leaves become -1 (ring entries read as empty),
-    K/V/SSM state leaves become 0 — including the quantized family's
-    codes and scales (``kv_quant.reset_slots`` semantics). Rows not
-    listed are untouched."""
+    eviction in the continuous-batching engine). Ring cache leaves are
+    stacked [L, B, ...]: ``pos`` leaves become -1 (ring entries read as
+    empty), K/V/SSM state leaves become 0 — including the quantized
+    family's codes and scales (``kv_quant.reset_slots`` semantics). Rows
+    not listed are untouched.
+
+    Paged cache dicts (``serve/kv_pool.py`` — detected by their
+    ``page_table`` leaf) are slot-indexed only through the table: the
+    slot's table row becomes -1 (every logical page unmapped), while the
+    pool payload/pos leaves are page-indexed shared state owned by the
+    host allocator and must not be wiped per-slot (another slot may map
+    those pages). Page recycling itself is the allocator's job
+    (``PagePool.release`` + ``apply_step_ops``)."""
     idx = jnp.asarray(slots, jnp.int32)
 
-    def fix(path, leaf):
-        name = str(getattr(path[-1], "key", ""))
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            if "page_table" in tree:
+                out = dict(tree)
+                tbl = tree["page_table"]
+                out["page_table"] = (tbl.at[:, idx].set(-1)
+                                     if tbl.ndim == 3 else
+                                     tbl.at[idx].set(-1))
+                return out
+            return {k: walk(v, k) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, name) for v in tree]
+        if isinstance(tree, tuple):
+            return tuple(walk(v, name) for v in tree)
+        if tree is None:
+            return None
         if name == "pos":
-            return leaf.at[:, idx].set(-1)
-        return leaf.at[:, idx].set(jnp.zeros((), leaf.dtype))
+            return tree.at[:, idx].set(-1)
+        return tree.at[:, idx].set(jnp.zeros((), tree.dtype))
 
-    return jax.tree_util.tree_map_with_path(fix, cache)
+    return walk(cache)

@@ -1,1 +1,1 @@
-from . import engine, kv_quant, scheduler
+from . import engine, kv_pool, kv_quant, scheduler

@@ -35,7 +35,26 @@ from repro.core.phases import Phase
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
 
+from . import kv_pool
 from .scheduler import Completion, Request, Scheduler
+
+
+def _paged_geometry(arch_cfg, ecfg: "EngineConfig"):
+    """(page_size, pages_per_seq, num_pages) of the paged layout — the
+    engine-side mirror of ``blocks.block_cache_init``'s geometry (the
+    logical table length is the effective ring length in pages)."""
+    clen = min(ecfg.cache_len, arch_cfg.window) if arch_cfg.window \
+        else ecfg.cache_len
+    ps = ecfg.page_size
+    if clen % ps:
+        raise ValueError(
+            f"page_size {ps} must divide the effective ring length {clen} "
+            f"(cache_len clipped to the window) so paged rollover wraps "
+            f"where the ring layout does")
+    pps = clen // ps
+    npages = ecfg.num_pages if ecfg.num_pages is not None \
+        else ecfg.max_batch * pps + 1
+    return ps, pps, npages
 
 
 def rebudget_pbits(pbits: np.ndarray, w: np.ndarray,
@@ -86,6 +105,21 @@ class EngineConfig:
     # kernel on Pallas). Greedy tokens stay engine- and backend-parity at
     # q4; they differ from kv_bits=None by the pinned KV round-trip error.
     kv_bits: Optional[int] = None
+    # KV-cache layout (DESIGN.md §13). "ring" reserves max_batch x
+    # cache_len slots up front; "paged" draws ``page_size``-token pages
+    # from a global pool on demand (serve/kv_pool.py: free-list +
+    # refcounted copy-on-write prefix sharing), so resident bytes scale
+    # with tokens actually cached and shared system prompts are stored
+    # once. DecodeEngine only; greedy tokens stay token-identical to the
+    # ring layout at equal kv_bits. ``page_size`` must divide the
+    # effective ring length (cache_len clipped to the window).
+    kv_layout: str = "ring"
+    page_size: int = 16
+    # Total pool pages incl. the reserved null page 0; None sizes for
+    # full per-slot residency (max_batch * pages_per_seq + 1 — paging can
+    # then never run out, occupancy is the win). Smaller pools gate
+    # admission on page availability (head-of-line, FIFO preserved).
+    num_pages: Optional[int] = None
 
 
 class _PackedEngine:
@@ -110,6 +144,9 @@ class _PackedEngine:
             self.cfg = dataclasses.replace(
                 self.cfg, quant=dataclasses.replace(
                     self.cfg.quant, act_scale_mode="per_token"))
+        if ecfg.kv_layout not in ("ring", "paged"):
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r} "
+                             f"(expected 'ring' or 'paged')")
         self.ecfg = ecfg
         self.params = params if already_serve else lifecycle.convert_tree(
             params, self.cfg.quant, rebudget=True)
@@ -117,9 +154,18 @@ class _PackedEngine:
             lambda p, c, t, pos: lm.decode_step(p, self.cfg, c, t, pos))
 
     def init_cache(self, batch: int):
-        return lm.init_cache(self.cfg, batch, self.ecfg.cache_len,
-                             jnp.dtype(self.ecfg.cache_dtype),
-                             kv_bits=self.ecfg.kv_bits)
+        ecfg = self.ecfg
+        if ecfg.kv_layout not in ("ring", "paged"):
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r} "
+                             f"(expected 'ring' or 'paged')")
+        kwargs = {}
+        if ecfg.kv_layout == "paged":
+            ps, _pps, npages = _paged_geometry(self.cfg, ecfg)
+            kwargs = dict(kv_layout="paged", page_size=ps,
+                          num_pages=npages)
+        return lm.init_cache(self.cfg, batch, ecfg.cache_len,
+                             jnp.dtype(ecfg.cache_dtype),
+                             kv_bits=ecfg.kv_bits, **kwargs)
 
 
 class LockstepEngine(_PackedEngine):
@@ -133,6 +179,11 @@ class LockstepEngine(_PackedEngine):
                  rng: Optional[jax.Array] = None) -> np.ndarray:
         """prompts [B, S0] int32 -> [B, S0 + max_new] (greedy unless
         temperature > 0)."""
+        if self.ecfg.kv_layout != "ring":
+            raise ValueError(
+                "LockstepEngine only supports kv_layout='ring': the paged "
+                "layout needs the DecodeEngine's host-side PagePool to "
+                "drive page allocation (DESIGN.md §13)")
         b, s0 = prompts.shape
         cache = self.init_cache(b)
         toks = jnp.asarray(prompts, jnp.int32)
@@ -219,30 +270,103 @@ class DecodeEngine(_PackedEngine):
         # max_batch by repeating the first slot (re-wiping a row is
         # idempotent), so eager per-admission scatters never compile.
         self._reset = jax.jit(lm.reset_cache_slots)
-        self.sched = Scheduler(b)
+        if ecfg.kv_layout == "paged":
+            self._apply_ops = jax.jit(kv_pool.apply_step_ops)
+            self._apply_poison = jax.jit(kv_pool.apply_poison)
+        self._init_host_state()
         self.cache = None
         self._keys = np.zeros((b, 2), np.uint32)
         self._temps = np.zeros((b,), np.float32)
 
+    def _init_host_state(self):
+        """(Re)build the host-side scheduler — and, in the paged layout,
+        the page-pool allocator that gates its admission."""
+        b = self.ecfg.max_batch
+        if self.ecfg.kv_layout == "paged":
+            ps, pps, npages = _paged_geometry(self.cfg, self.ecfg)
+            self.pool = kv_pool.PagePool(npages, ps, pps, b)
+            self.sched = Scheduler(b, can_admit=self.pool.admissible)
+            # Per-step device-op capacities (fixed jit shapes): each
+            # planned slot touches at most ceil(chunk/page) + 1 pages.
+            self._op_cap = b * (-(-max(self.chunk, 1) // ps) + 1)
+            self._table_dirty = True       # first flush uploads the table
+        else:
+            self.pool = None
+            self.sched = Scheduler(b)
+
     # --------------------------------------------------------- requests ----
     def submit(self, request: Request) -> int:
-        """Queue a request; returns its request_id."""
-        return self.sched.submit(request)
+        """Queue a request; returns its request_id. In the paged layout a
+        prompt whose page demand can never fit the pool is rejected here
+        (ValueError) rather than deadlocking the admission queue, and the
+        prompt's page digests are memoized for the prefix-map lookup at
+        admission."""
+        if self.pool is not None:
+            plen = int(np.asarray(request.prompt).reshape(-1).shape[0])
+            if plen and self.pool.target_pages(plen) > self.pool.capacity:
+                raise ValueError(
+                    f"prompt needs {self.pool.target_pages(plen)} KV pages "
+                    f"but the pool only has {self.pool.capacity} "
+                    f"allocatable pages — it could never be admitted. "
+                    f"Raise EngineConfig.num_pages or shorten the prompt.")
+        rid = self.sched.submit(request)
+        if self.pool is not None and request.max_new_tokens > 0:
+            self.pool.note_submit(rid, request.prompt)
+        return rid
 
     def reset(self):
         """Drop all queued/active requests and cache state."""
-        self.sched = Scheduler(self.ecfg.max_batch)
+        self._init_host_state()
         self.cache = None
+
+    # ---------------------------------------------------------- paging ----
+    def _flush_pool_ops(self, ops: "kv_pool.StepOps"):
+        """Apply one batch of allocator decisions to the device cache:
+        COW copies + fresh-page wipes + the full host page table (one
+        fixed-shape jitted call — ids are padded with null-page no-ops),
+        then any debug poisons. No-op when nothing changed."""
+        if ops.any() or self._table_dirty:
+            cap = self._op_cap
+            assert len(ops.wipes) <= cap and len(ops.copies) <= cap, \
+                (len(ops.wipes), len(ops.copies), cap)
+            wipes = np.zeros((cap,), np.int32)     # pad: re-wipe null page
+            wipes[:len(ops.wipes)] = ops.wipes
+            src = np.zeros((cap,), np.int32)       # pad: null self-copy
+            dst = np.zeros((cap,), np.int32)
+            for i, (s, d) in enumerate(ops.copies):
+                src[i], dst[i] = s, d
+            self.cache = self._apply_ops(self.cache, self.pool.table,
+                                         wipes, src, dst)
+            self._table_dirty = False
+        if ops.poisons:
+            # Pad by repeating a real pid (the null page is never
+            # poisoned); fixed capacity = the whole pool.
+            pids = np.full((self.pool.capacity,), ops.poisons[0], np.int32)
+            pids[:len(ops.poisons)] = ops.poisons
+            self.cache = self._apply_poison(self.cache, pids)
 
     # ------------------------------------------------------------- step ----
     def step(self) -> List[Completion]:
         """One engine step: admit arrived requests into free slots (wiping
         their cache rows), feed every active slot (chunked prefill for
         prompt-phase slots, one token for decode-phase slots), sample, and
-        return any completions (their slots free up for the next step)."""
+        return any completions (their slots free up for the next step).
+
+        Paged layout (DESIGN.md §13): admission maps prefix-map hits into
+        the slot's page table (those prompt tokens skip prefill — the
+        final prompt token is always re-fed, its logits seed sampling);
+        before the device step the allocator makes every page the step
+        writes privately mapped (fresh allocations wiped, shared/
+        registered pages copy-on-write); after it, freshly completed
+        prompt pages register in the prefix map and finished slots release
+        their pages (back to the free list, or parked in the cached LRU
+        when registered — poisoned in ``SONIQ_KV_POISON=1`` debug mode).
+        """
         b = self.ecfg.max_batch
         if self.cache is None:
             self.cache = self.init_cache(b)
+            if self.pool is not None:
+                self._table_dirty = True
         admitted = self.sched.admit()
         if admitted:
             idx = np.full((b,), admitted[0][0], np.int32)
@@ -251,10 +375,25 @@ class DecodeEngine(_PackedEngine):
             for slot, req in admitted:
                 self._keys[slot] = _key_bits(jax.random.PRNGKey(req.seed))
                 self._temps[slot] = req.temperature
+                if self.pool is not None:
+                    shared = self.pool.admit(slot, req)
+                    if shared:
+                        # Prefix hit: those tokens are already in mapped
+                        # pages — prefill starts after them.
+                        self.sched.slots[slot].n_fed = shared
+                        self._table_dirty = True
         plan = self.sched.plan(self.chunk)
         if not plan:                       # idle: let queued arrivals age in
             return self.sched.advance({}, {})
         widths = {s: len(t) for s, t in plan.items()}
+        if self.pool is not None:
+            ops = kv_pool.StepOps()
+            for slot, n in widths.items():
+                self.pool.prepare(slot, self.sched.slots[slot].n_fed, n,
+                                  ops)
+            if ops.any():
+                self._table_dirty = True
+            self._flush_pool_ops(ops)
         counts = np.zeros((b,), np.int32)
         for slot in plan:
             counts[slot] = len(self.sched.slots[slot].generated)
@@ -284,8 +423,60 @@ class DecodeEngine(_PackedEngine):
                                            tokens, pos, active, self._keys,
                                            self._temps, counts)
         sampled = np.asarray(out)
-        return self.sched.advance(
+        slot_of = {st.request.request_id: s
+                   for s, st in self.sched.slots.items()}
+        # Post-step fed counts, captured before advance() pops finished
+        # slots: note_filled's wrapped-through guard needs the TRUE fed
+        # count (prompt + generated - 1), not the prompt length — a
+        # wrap-overwritten page must never register as prompt content.
+        fed_of = {st.request.request_id: st.n_fed + widths.get(s, 0)
+                  for s, st in self.sched.slots.items()}
+        done = self.sched.advance(
             widths, {s: int(sampled[s]) for s in plan})
+        if self.pool is not None:
+            ops = kv_pool.StepOps()
+            for c in done:
+                slot = slot_of.get(c.request_id)
+                if slot is None:           # zero-generation immediate
+                    continue
+                # Register the finished prompt's full pages before the
+                # release parks them in the cached LRU for future hits.
+                self.pool.note_filled(slot, c.request.prompt,
+                                      fed_of[c.request_id])
+                self.pool.release(slot, ops)
+                self._table_dirty = True
+            for slot in plan:
+                st = self.sched.slots.get(slot)
+                if st is not None:
+                    self.pool.note_filled(slot, st.request.prompt,
+                                          st.n_fed)
+            self._flush_pool_ops(ops)
+        return done
+
+    # ---------------------------------------------------------- metrics ----
+    def paged_kv_stats(self) -> dict:
+        """Occupancy / sharing metrics of the paged KV pool (benchmarks
+        record these next to tokens/s — DESIGN.md §13). Byte figures count
+        K/V *payload* only (codes + scales / fp k and v), matching
+        ``kv_quant.cache_payload_bytes`` on the ring side; a "page" spans
+        every layer (the allocator maps one physical id in all layers)."""
+        assert self.pool is not None, "paged_kv_stats needs kv_layout='paged'"
+        assert self.cache is not None, "run at least one step first"
+        per_page = kv_pool.paged_payload_bytes_per_page(self.cache)
+        pool = self.pool
+        return {
+            "page_size": pool.page_size,
+            "num_pages": pool.num_pages,
+            "page_payload_bytes": per_page,
+            "resident_pages": pool.resident_pages,
+            "peak_resident_pages": pool.peak_resident,
+            "resident_payload_bytes": pool.resident_pages * per_page,
+            "peak_resident_payload_bytes": pool.peak_resident * per_page,
+            "reserved_payload_bytes": pool.capacity * per_page,
+            "prefix_hits": pool.hits,
+            "prefix_lookups": pool.lookups,
+            "prefix_hit_rate": pool.prefix_hit_rate,
+        }
 
     # -------------------------------------------------------- streaming ----
     def run(self) -> Iterator[Completion]:

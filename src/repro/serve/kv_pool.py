@@ -1,0 +1,665 @@
+"""Paged KV-cache subsystem: block-pool allocator + paged device cache
+(DESIGN.md §13).
+
+The ring layouts (``models.attention`` fp, ``serve/kv_quant.py`` packed
+q4) reserve ``max_batch x cache_len`` K/V slots up front, so cache memory
+scales with *configured capacity*. This module pages the same payload into
+fixed-size token pages drawn from one global pool, vLLM-style:
+
+* **Device side** — per-layer cache dicts whose payload leaves are pools
+  ``[P, page_size, Hk, ...]`` (``k_codes``/``v_codes``/``k_scale``/
+  ``v_scale`` for q4, ``k``/``v`` for fp) plus pool-wide position stamps
+  ``pos [P, page_size]`` (-1 = empty) and per-slot page tables
+  ``page_table [B, NP]`` (physical page id per logical page, -1 =
+  unmapped). Physical page 0 is the reserved **null page**: never
+  allocated, payload zero, ``pos`` -1 forever — readers clamp unmapped
+  ids to it, so a hole in a table reads as empty without special-casing.
+* **Host side** — :class:`PagePool`, a jax-free allocator (mirror of the
+  ``Scheduler`` split): free-list, per-page refcounts, copy-on-write for
+  shared pages, and a content-hash prefix map so identical prompt pages
+  are shared across requests (and cached LRU across request lifetimes).
+  The pool never touches device memory itself; it emits :class:`StepOps`
+  (pages to wipe, COW copies, the table) that the engine applies through
+  one fixed-shape jitted call per step (:func:`apply_step_ops`).
+
+Ring parity: logical page ``(pos // page_size) % NP`` at offset
+``pos % page_size`` is exactly the ring slot ``pos % cache_len`` when
+``page_size`` divides the ring length (the engine asserts it), and COW /
+alloc preserve or wipe whole pages, so a paged ``DecodeEngine`` is
+token-identical to the ring engine at temperature 0
+(tests/test_kv_pool.py). Masked lanes (``pos < 0``) scatter out of
+bounds and drop, exactly like both ring families.
+
+``SONIQ_KV_POISON=1`` (or ``PagePool(poison=True)``) returns freed pages
+poisoned — NaN scales/payload with the stale ``pos`` stamps kept — so a
+stale page-table reference (use-after-free) turns the attention output
+NaN instead of silently reading a recycled page. Pages are wiped clean at
+allocation, so the knob is parity-preserving for correct code; it cannot
+catch a stale read that happens *after* the page was legitimately
+reallocated and rewritten (the classic ASAN reuse window).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+POISON_ENV = "SONIQ_KV_POISON"
+
+# Leaf-name vocabulary of the paged family. Payload names deliberately
+# match the ring families' so ``kv_quant.cache_payload_bytes`` accounts
+# both layouts; ``page_table`` joins ``pos`` in the meta bucket there.
+_Q4_PAYLOAD = ("k_codes", "v_codes", "k_scale", "v_scale")
+_FP_PAYLOAD = ("k", "v")
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` tokens (ceil)."""
+    return -(-tokens // page_size)
+
+
+# ===================================================== device layout ====
+def _paged_shapes(num_pages: int, page_size: int, pages_per_seq: int,
+                  batch: int, num_kv_heads: int, head_dim: int,
+                  kv_bits: Optional[int], dtype) -> Dict[str, Tuple]:
+    assert num_pages >= 2, "pool needs the null page + >= 1 usable page"
+    p, ps = num_pages, page_size
+    if kv_bits is None:
+        shapes = {"k": ((p, ps, num_kv_heads, head_dim), dtype),
+                  "v": ((p, ps, num_kv_heads, head_dim), dtype)}
+    else:
+        assert kv_bits == 4, f"kv_bits must be None or 4, got {kv_bits}"
+        assert head_dim % 2 == 0
+        shapes = {
+            "k_codes": ((p, ps, num_kv_heads, head_dim // 2), jnp.uint8),
+            "v_codes": ((p, ps, num_kv_heads, head_dim // 2), jnp.uint8),
+            "k_scale": ((p, ps, num_kv_heads, 1), jnp.float16),
+            "v_scale": ((p, ps, num_kv_heads, 1), jnp.float16),
+        }
+    shapes["pos"] = ((p, ps), jnp.int32)
+    shapes["page_table"] = ((batch, pages_per_seq), jnp.int32)
+    return shapes
+
+
+def init_paged_cache(num_pages: int, page_size: int, pages_per_seq: int,
+                     batch: int, num_kv_heads: int, head_dim: int, *,
+                     kv_bits: Optional[int] = None,
+                     dtype=jnp.bfloat16) -> Dict:
+    """One layer's paged KV cache: payload pools + pos stamps + tables.
+    ``num_pages`` includes the reserved null page 0."""
+    shapes = _paged_shapes(num_pages, page_size, pages_per_seq, batch,
+                           num_kv_heads, head_dim, kv_bits, dtype)
+    out = {}
+    for name, (sh, dt) in shapes.items():
+        fill = -1 if name in ("pos", "page_table") else 0
+        out[name] = jnp.full(sh, fill, dt)
+    return out
+
+
+def paged_cache_specs(num_pages: int, page_size: int, pages_per_seq: int,
+                      batch: int, num_kv_heads: int, head_dim: int, *,
+                      kv_bits: Optional[int] = None,
+                      dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStructs of :func:`init_paged_cache` (dry-run)."""
+    shapes = _paged_shapes(num_pages, page_size, pages_per_seq, batch,
+                           num_kv_heads, head_dim, kv_bits, dtype)
+    return {name: jax.ShapeDtypeStruct(sh, dt)
+            for name, (sh, dt) in shapes.items()}
+
+
+def update_paged_cache(cache: Dict, k_new, v_new, pos, *,
+                       layer_idx=None) -> Dict:
+    """Write a chunk of new K/V (``k_new``/``v_new`` [B, S, H, D]) into
+    the pages the table maps for positions ``pos`` ([B] or [B, S]).
+
+    The destination of token ``pos`` is page
+    ``page_table[b, (pos // page_size) % NP]`` at offset
+    ``pos % page_size`` — the host allocator has already made every
+    written page private and mapped (COW/alloc happen *before* the jitted
+    step), so the scatter never lands on a shared page. Lanes with
+    ``pos < 0`` or an unmapped table entry scatter out of bounds and drop
+    (``mode="drop"``), the same masked-lane contract as both ring
+    families. q4 caches quantize through ``kv_quant.quantize_kv``; fp
+    caches store as-is. ``layer_idx`` selects the stacked ``[L, ...]``
+    scan-carry layout.
+    """
+    stacked = layer_idx is not None
+    table = cache["page_table"]
+    if stacked:
+        table = jax.lax.dynamic_index_in_dim(table, layer_idx, 0, False)
+    npages = cache["pos"].shape[1 if stacked else 0]
+    ps = cache["pos"].shape[-1]
+    n_logical = table.shape[-1]
+    posb = pos[:, None] if pos.ndim == 1 else pos            # [B, S]
+    lp = ((posb // ps) % n_logical).astype(jnp.int32)
+    pid = jnp.take_along_axis(table, lp, axis=1)             # [B, S]
+    off = (posb % ps).astype(jnp.int32)
+    # Masked / unmapped lanes scatter out of bounds -> dropped.
+    dest = jnp.where((posb >= 0) & (pid >= 0), pid,
+                     npages).astype(jnp.int32)
+    if "k_codes" in cache:
+        from . import kv_quant
+        kc, ks = kv_quant.quantize_kv(k_new)
+        vc, vs = kv_quant.quantize_kv(v_new)
+        new = {"k_codes": kc, "v_codes": vc, "k_scale": ks, "v_scale": vs,
+               "pos": posb}
+    else:
+        new = {"k": k_new, "v": v_new, "pos": posb}
+    out = dict(cache)
+    for name, val in new.items():
+        leaf = cache[name]
+        val = val.astype(leaf.dtype)
+        if stacked:
+            out[name] = leaf.at[layer_idx, dest, off].set(val, mode="drop")
+        else:
+            out[name] = leaf.at[dest, off].set(val, mode="drop")
+    return out
+
+
+def gather_paged(cache: Dict, dtype=jnp.float32):
+    """Dense view of a paged layer cache: -> (k [B,T,Hk,D], v, pos [B,T])
+    with T = NP * page_size — the jnp oracle the
+    ``qkv_attn_decode_paged`` backend op is gated against. Unmapped table
+    entries clamp to the null page (payload zero, pos -1), so holes read
+    as empty ring entries."""
+    table = cache["page_table"]                              # [B, NP]
+    b, n_logical = table.shape
+    safe = jnp.maximum(table, 0)
+
+    def take(leaf):                                          # [P, ps, ...]
+        return jnp.take(leaf, safe, axis=0)                  # [B, NP, ps, ...]
+
+    pos = take(cache["pos"])
+    pos = jnp.where(table[..., None] >= 0, pos, -1)
+    ps = pos.shape[-1]
+    t = n_logical * ps
+    pos = pos.reshape(b, t)
+    if "k_codes" in cache:
+        from . import kv_quant
+        k = kv_quant.dequantize_kv(
+            take(cache["k_codes"]).reshape(b, t, *cache["k_codes"].shape[2:]),
+            take(cache["k_scale"]).reshape(b, t, *cache["k_scale"].shape[2:]),
+            dtype)
+        v = kv_quant.dequantize_kv(
+            take(cache["v_codes"]).reshape(b, t, *cache["v_codes"].shape[2:]),
+            take(cache["v_scale"]).reshape(b, t, *cache["v_scale"].shape[2:]),
+            dtype)
+    else:
+        k = take(cache["k"]).reshape(b, t, *cache["k"].shape[2:]).astype(dtype)
+        v = take(cache["v"]).reshape(b, t, *cache["v"].shape[2:]).astype(dtype)
+    return k, v, pos
+
+
+# =============================================== device op application ====
+def _walk_paged(tree, fn):
+    """Apply ``fn`` to every paged cache dict (identified by a
+    ``page_table`` leaf) in an lm cache tree; other nodes pass through."""
+    if isinstance(tree, dict):
+        if "page_table" in tree:
+            return fn(tree)
+        return {k: _walk_paged(v, fn) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_walk_paged(v, fn) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(_walk_paged(v, fn) for v in tree)
+    return tree
+
+
+def apply_step_ops(cache, table, wipe, copy_src, copy_dst):
+    """Apply one step's allocator decisions to every paged dict in the
+    cache tree (jit once per shape — the engine pads the id vectors to a
+    fixed capacity):
+
+    * ``copy_src``/``copy_dst`` [C] int32 — COW: page ``dst`` becomes a
+      full copy of ``src`` (payload + pos stamps, so a ring wraparound
+      into a shared page preserves what the ring would have kept).
+      Padding entries are (0, 0) self-copies of the null page (no-ops).
+    * ``wipe`` [W] int32 — freshly allocated pages: payload zero, pos -1
+      (clears any stale stamps or debug poison before reuse). Padding
+      entries are the null page (already empty; re-wiping is idempotent).
+    * ``table`` [B, NP] int32 — the new page tables, broadcast across the
+      stacked layer dim (every layer writes the same token positions).
+
+    Copies run before wipes; the allocator never wipes a COW destination
+    (it receives a full copy) and never copies from a freed page.
+    """
+    table = jnp.asarray(table, jnp.int32)
+    wipe = jnp.asarray(wipe, jnp.int32)
+    src = jnp.asarray(copy_src, jnp.int32)
+    dst = jnp.asarray(copy_dst, jnp.int32)
+
+    def fix(d):
+        stacked = d["page_table"].ndim == 3
+        out = dict(d)
+        for name, leaf in d.items():
+            if name == "page_table":
+                out[name] = (jnp.broadcast_to(table[None], leaf.shape)
+                             if stacked else table)
+                continue
+            fill = jnp.full((), -1 if name == "pos" else 0, leaf.dtype)
+            if stacked:
+                leaf = leaf.at[:, dst].set(leaf[:, src])
+                leaf = leaf.at[:, wipe].set(fill)
+            else:
+                leaf = leaf.at[dst].set(leaf[src])
+                leaf = leaf.at[wipe].set(fill)
+            out[name] = leaf
+        return out
+
+    return _walk_paged(cache, fix)
+
+
+def apply_poison(cache, pids):
+    """Poison freed pages (debug mode): NaN the fp payload / fp16 scales
+    and 0xFF the packed codes, but KEEP the ``pos`` stamps — a stale
+    page-table reference then sails through the position mask and turns
+    the attention output NaN (0-weight x NaN is still NaN through the
+    value contraction), which is the use-after-free trip wire
+    ``SONIQ_KV_POISON=1`` buys. Allocation wipes the poison away before
+    legitimate reuse (:func:`apply_step_ops`)."""
+    pids = jnp.asarray(pids, jnp.int32)
+
+    def fix(d):
+        out = dict(d)
+        for name, leaf in d.items():
+            if name in ("pos", "page_table"):
+                continue
+            bad = jnp.full((), 0xFF if name.endswith("_codes")
+                           else jnp.nan, leaf.dtype)
+            out[name] = (leaf.at[:, pids].set(bad)
+                         if d["page_table"].ndim == 3
+                         else leaf.at[pids].set(bad))
+        return out
+
+    return _walk_paged(cache, fix)
+
+
+def paged_payload_bytes_per_page(cache) -> int:
+    """Payload bytes of ONE pool page summed over every paged dict (and
+    stacked layer) in the cache tree — resident-byte accounting is
+    ``pages_in_use x this``."""
+    per_page = 0
+    names = set(_Q4_PAYLOAD) | set(_FP_PAYLOAD)
+
+    # Bytes of each payload leaf divided by its page count (stacked leaves
+    # already include the layer dim in their total, so a "page" here means
+    # the page's bytes across every layer — matching how the allocator
+    # maps the same physical page id in all layers at once).
+    def tally(d):
+        nonlocal per_page
+        stacked = d["page_table"].ndim == 3
+        npages = d["pos"].shape[1 if stacked else 0]
+        for name, leaf in d.items():
+            if name in names:
+                total = int(np.prod(leaf.shape, dtype=np.int64)) \
+                    * np.dtype(leaf.dtype).itemsize
+                per_page += total // npages
+        return d
+
+    _walk_paged(cache, tally)
+    return per_page
+
+
+# ======================================================= host allocator ====
+@dataclasses.dataclass
+class StepOps:
+    """Device work one or more allocator calls accumulated: applied by the
+    engine through :func:`apply_step_ops` / :func:`apply_poison`."""
+    wipes: List[int] = dataclasses.field(default_factory=list)
+    copies: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    poisons: List[int] = dataclasses.field(default_factory=list)
+
+    def any(self) -> bool:
+        return bool(self.wipes or self.copies)
+
+
+class PagePool:
+    """Host-side page allocator: free-list + refcounts + COW + prefix map.
+
+    Deliberately jax-free (the ``Scheduler`` split, DESIGN.md §10): all
+    decisions happen here on numpy state; device effects are emitted as
+    :class:`StepOps`. Invariants (pinned by the hypothesis property tests
+    in tests/test_kv_pool.py):
+
+    * every non-null page is in exactly one of {free list, cached LRU,
+      mapped (refcount > 0)} — no double-free, no lost pages;
+    * ``refcount[p]`` equals the number of page-table references to ``p``;
+    * a page that is shared (refcount > 1) or registered in the prefix
+      map is never handed out for in-place writes — rollover into it
+      triggers copy-on-write;
+    * the null page 0 is never allocated, never freed, never written.
+
+    Prefix sharing: full prompt pages are content-hashed (a chain digest,
+    so page i's hash commits to pages 0..i) and registered once fully
+    written; a later request whose leading pages hash-match maps them
+    refcounted instead of re-prefilling (the last prompt token is always
+    re-fed — its logits seed sampling — so at most ``len(prompt) - 1``
+    tokens resolve from the prefix map). Registered pages whose refcount
+    drops to 0 are parked in a cached LRU and revived on the next hit;
+    they are evicted (and unregistered) only when the free list runs dry.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, pages_per_seq: int,
+                 max_batch: int, *, poison: Optional[bool] = None):
+        assert num_pages >= 2, "pool needs the null page + >= 1 usable page"
+        assert page_size > 0 and pages_per_seq > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_seq = pages_per_seq
+        self.max_batch = max_batch
+        if poison is None:
+            poison = os.environ.get(POISON_ENV, "0") not in ("", "0")
+        self.poison = bool(poison)
+        # pop() hands out low ids first (nicer to read in tests/dumps)
+        self.free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.refcount = np.zeros(num_pages, np.int64)
+        self.table = np.full((max_batch, pages_per_seq), -1, np.int32)
+        self.page_hash: Dict[int, bytes] = {}     # registered pid -> digest
+        self.prefix_map: Dict[bytes, int] = {}    # digest -> canonical pid
+        self.cached: "OrderedDict[int, bytes]" = OrderedDict()  # LRU
+        self.lookups = 0
+        self.hits = 0
+        self.peak_resident = 0
+        self._hash_memo: Dict[int, Tuple[bytes, ...]] = {}
+        self._slot_hashes: Dict[int, Tuple[bytes, ...]] = {}
+        self._target_pages: Dict[int, int] = {}
+        # request_id -> net page demand reserved by an admissible() pass
+        # that returned True; consumed by the matching admit().
+        self._pending: Dict[int, int] = {}
+
+    # -------------------------------------------------------- geometry ----
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the null page is reserved)."""
+        return self.num_pages - 1
+
+    @property
+    def resident_pages(self) -> int:
+        """Pages holding live data: mapped (refcount > 0) + cached-LRU
+        prefix pages. Free (even poisoned) pages hold nothing."""
+        return self.capacity - len(self.free)
+
+    def target_pages(self, prompt_len: int) -> int:
+        """Page demand of a prompt, capped at the per-sequence table
+        length (longer prompts wrap the logical ring, reusing pages)."""
+        return min(pages_for(prompt_len, self.page_size),
+                   self.pages_per_seq)
+
+    # --------------------------------------------------------- hashing ----
+    def page_hashes(self, prompt) -> Tuple[bytes, ...]:
+        """Chain digests of the prompt's FULL pages: hash of page i
+        commits to the tokens of pages 0..i, so equal digests mean equal
+        whole prefixes, never just an equal middle page."""
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        ps = self.page_size
+        out = []
+        h = b"soniq-paged-kv"
+        for i in range(len(toks) // ps):
+            h = hashlib.sha1(h + toks[i * ps:(i + 1) * ps].tobytes()).digest()
+            out.append(h)
+        return tuple(out)
+
+    def _shareable(self, prompt, hashes) -> int:
+        """How many leading pages an admission could map from the prefix
+        map right now. Capped so the final prompt token is always re-fed
+        (its logits seed sampling) and page demand never exceeds the
+        table; the scan stops at the first miss (a prefix is contiguous
+        by construction)."""
+        plen = int(np.asarray(prompt).reshape(-1).shape[0])
+        cap = min((plen - 1) // self.page_size, self.pages_per_seq - 1)
+        n = 0
+        for i in range(min(len(hashes), cap)):
+            if hashes[i] not in self.prefix_map:
+                break
+            n += 1
+        return n
+
+    # ------------------------------------------------------- admission ----
+    def note_submit(self, request_id: int, prompt) -> int:
+        """Prefix-hash lookup at submit() time: memoize the prompt's page
+        digests for admission and return how many pages would hit the
+        prefix map today (observability; the authoritative mapping
+        happens at :meth:`admit`)."""
+        hashes = self.page_hashes(prompt)
+        self._hash_memo[request_id] = hashes
+        return self._shareable(prompt, hashes)
+
+    def _outstanding_prompt_pages(self) -> int:
+        """Prompt pages promised but not yet allocated: admitted slots
+        whose prefills are still running, plus requests an
+        :meth:`admissible` pass reserved for this step (their
+        :meth:`admit` has not run yet)."""
+        total = sum(self._pending.values())
+        for slot, target in self._target_pages.items():
+            mapped = int((self.table[slot] >= 0).sum())
+            total += max(0, target - mapped)
+        return total
+
+    def admissible(self, request) -> bool:
+        """Can the pool cover this request's prompt pages right now?
+        Counts free + evictable-cached pages, minus pages already
+        promised to in-flight prefills — the ``Scheduler.admit`` capacity
+        callback (head-of-line blocking: FIFO order is preserved, the
+        queue just waits for pages).
+
+        A True return RESERVES the request's net page demand (keyed by
+        ``request_id``) until the matching :meth:`admit` consumes it:
+        ``Scheduler.admit`` checks each head-of-queue request in a loop
+        before the engine runs any ``admit()``, so without the
+        reservation the second request of a step would not see the
+        first's demand and a tight pool could be overcommitted."""
+        prompt = np.asarray(request.prompt).reshape(-1)
+        rid = getattr(request, "request_id", None)
+        hashes = self._hash_memo.get(rid)
+        if hashes is None:
+            hashes = self.page_hashes(prompt)
+        need = self.target_pages(len(prompt)) \
+            - self._shareable(prompt, hashes)
+        avail = len(self.free) + len(self.cached) \
+            - self._outstanding_prompt_pages()
+        ok = need <= avail
+        if ok and rid is not None:
+            self._pending[rid] = need
+        return ok
+
+    def admit(self, slot: int, request) -> int:
+        """Map the request's shared prefix pages into ``slot``'s table and
+        return the number of prompt tokens they already hold (the engine
+        starts the prefill there). No pages are allocated here — writes
+        allocate lazily through :meth:`prepare`."""
+        assert (self.table[slot] < 0).all(), \
+            f"slot {slot} admitted with a dirty table (missing release?)"
+        prompt = np.asarray(request.prompt).reshape(-1)
+        rid = getattr(request, "request_id", None)
+        # The slot's _target_pages entry takes over capacity tracking
+        # from the admissible() reservation.
+        self._pending.pop(rid, None)
+        hashes = self._hash_memo.pop(rid, None)
+        if hashes is None:
+            hashes = self.page_hashes(prompt)
+        self._slot_hashes[slot] = hashes
+        self._target_pages[slot] = self.target_pages(len(prompt))
+        shared = self._shareable(prompt, hashes)
+        for i in range(shared):
+            self.lookups += 1
+            self.hits += 1
+            self._ref_page(self.prefix_map[hashes[i]])
+            self.table[slot, i] = self.prefix_map[hashes[i]]
+        if shared < len(hashes):
+            self.lookups += 1                    # the probe that missed
+        return shared * self.page_size
+
+    # ------------------------------------------------------ allocation ----
+    def _ref_page(self, pid: int):
+        if self.refcount[pid] == 0:
+            # Reviving a cached registered page: it leaves the LRU.
+            self.cached.pop(pid, None)
+        self.refcount[pid] += 1
+        self.peak_resident = max(self.peak_resident, self.resident_pages)
+
+    def _unref(self, pid: int, ops: StepOps):
+        assert self.refcount[pid] > 0, f"double free of page {pid}"
+        self.refcount[pid] -= 1
+        if self.refcount[pid]:
+            return
+        if pid in self.page_hash:
+            # Registered prefix pages park in the cached LRU (revivable).
+            self.cached[pid] = self.page_hash[pid]
+            self.cached.move_to_end(pid)
+            return
+        self.free.append(pid)
+        if self.poison:
+            ops.poisons.append(pid)
+
+    def _alloc(self, ops: StepOps, *, wipe: bool) -> int:
+        if self.free:
+            pid = self.free.pop()
+            if pid in ops.poisons:
+                # Freed and reallocated within the same op batch: the
+                # engine applies poisons after wipes, so a stale poison
+                # would corrupt the fresh allocation — drop it (the wipe
+                # clears the page either way).
+                ops.poisons.remove(pid)
+        elif self.cached:
+            # Evict the least-recently-parked prefix page: it leaves the
+            # prefix map for good (its bytes are about to be overwritten).
+            pid, _digest = self.cached.popitem(last=False)
+            self._unregister(pid)
+        else:
+            raise RuntimeError(
+                "KV page pool exhausted mid-step: every page is mapped by "
+                "an active request. Admission only reserves prompt pages; "
+                "size the pool for decode growth (EngineConfig.num_pages "
+                ">= max_batch * pages_per_seq + 1, the default) or lower "
+                "max_batch.")
+        self.refcount[pid] = 1
+        if wipe:
+            ops.wipes.append(pid)
+        self.peak_resident = max(self.peak_resident, self.resident_pages)
+        return pid
+
+    def _unregister(self, pid: int) -> None:
+        """Drop a page's prefix-map registration (its content is about to
+        stop being canonical prompt bytes)."""
+        digest = self.page_hash.pop(pid)
+        if self.prefix_map.get(digest) == pid:
+            del self.prefix_map[digest]
+
+    def prepare(self, slot: int, start: int, width: int,
+                ops: StepOps) -> None:
+        """Make every page touched by the token positions
+        ``[start, start + width)`` of ``slot`` privately writable before
+        the device step: unmapped logical pages allocate (and wipe);
+        mapped pages that are shared (refcount > 1) or registered
+        (immutable prefix content) copy-on-write. Accumulates the device
+        work into ``ops`` and updates the host table.
+
+        One COW case degrades gracefully instead of raising: when the
+        page is ours alone (refcount 1) and only registered, and the pool
+        has no spare page anywhere (free and cached both empty — e.g. a
+        full-residency slot's decode wrapping the logical ring with the
+        default ``num_pages`` sizing), the canonical is unregistered and
+        the page written in place — exactly where the ring layout would
+        wrap. Future prompts with that prefix simply re-prefill."""
+        assert width > 0
+        ps, npg = self.page_size, self.pages_per_seq
+        for lp_abs in range(start // ps, (start + width - 1) // ps + 1):
+            lp = lp_abs % npg
+            pid = int(self.table[slot, lp])
+            if pid < 0:
+                self.table[slot, lp] = self._alloc(ops, wipe=True)
+            elif self.refcount[pid] > 1 or pid in self.page_hash:
+                if self.refcount[pid] == 1 and not self.free \
+                        and not self.cached:
+                    self._unregister(pid)     # write in place (wrap)
+                    continue
+                new = self._alloc(ops, wipe=False)
+                ops.copies.append((pid, new))
+                self.table[slot, lp] = new
+                self._unref(pid, ops)
+
+    def note_filled(self, slot: int, prompt, n_fed: int) -> None:
+        """Register ``slot``'s fully written prompt pages into the prefix
+        map (call after each engine step advances). Only exact, final
+        content registers: wrapped prompts (longer than the logical ring)
+        never do — their early pages were overwritten — and a page whose
+        digest already has a canonical copy is left private rather than
+        remapped."""
+        prompt = np.asarray(prompt).reshape(-1)
+        plen = len(prompt)
+        if plen > self.pages_per_seq * self.page_size:
+            return
+        hashes = self._slot_hashes.get(slot)
+        if hashes is None:
+            hashes = self.page_hashes(prompt)
+        full = min(n_fed, plen) // self.page_size
+        # Decode growth wrapping the logical ring overwrites the early
+        # pages in place (registered pages COW away first, but a private
+        # unregistered page is legally rewritten): page i no longer holds
+        # prompt content once the wrap reached it, so it must not enter
+        # the prefix map.
+        wrapped_through = ((n_fed - 1) // self.page_size
+                           - self.pages_per_seq
+                           if n_fed > self.pages_per_seq * self.page_size
+                           else -1)
+        for i in range(min(full, len(hashes))):
+            if i <= wrapped_through:
+                continue
+            pid = int(self.table[slot, i])
+            if pid < 0 or pid in self.page_hash:
+                continue                        # unmapped / already known
+            if hashes[i] in self.prefix_map:
+                continue                        # another copy is canonical
+            self.prefix_map[hashes[i]] = pid
+            self.page_hash[pid] = hashes[i]
+
+    def release(self, slot: int, ops: StepOps) -> None:
+        """Drop every page reference of a finished/evicted slot.
+        Unregistered pages go back on the free list (poisoned in debug
+        mode); registered prefix pages park in the cached LRU for future
+        hits."""
+        for lp in range(self.pages_per_seq):
+            pid = int(self.table[slot, lp])
+            if pid >= 0:
+                self._unref(pid, ops)
+            self.table[slot, lp] = -1
+        self._target_pages.pop(slot, None)
+        self._slot_hashes.pop(slot, None)
+
+    # ----------------------------------------------------- observability --
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def check(self) -> None:
+        """Assert the allocator invariants (test hook): the free list,
+        cached LRU and mapped set partition the non-null pages, and
+        refcounts equal table reference counts."""
+        every = set(range(1, self.num_pages))
+        free = set(self.free)
+        cached = set(self.cached)
+        mapped = {int(p) for p in np.unique(self.table[self.table >= 0])}
+        assert len(free) == len(self.free), "duplicate page on free list"
+        assert 0 not in free | cached | mapped, "null page leaked"
+        assert free.isdisjoint(cached), free & cached
+        assert free.isdisjoint(mapped), free & mapped
+        assert cached.isdisjoint(mapped), cached & mapped
+        assert free | cached | mapped == every, \
+            ("lost pages", every - (free | cached | mapped))
+        want = np.zeros(self.num_pages, np.int64)
+        pids, counts = np.unique(self.table[self.table >= 0],
+                                 return_counts=True)
+        want[pids] = counts
+        assert (want == self.refcount).all(), \
+            ("refcount drift", want.tolist(), self.refcount.tolist())
+        for pid in cached:
+            assert pid in self.page_hash, f"cached page {pid} unregistered"
+        for digest, pid in self.prefix_map.items():
+            assert self.page_hash.get(pid) == digest, \
+                f"prefix map / page hash drift at page {pid}"

@@ -158,7 +158,10 @@ def read_qkv_cache(cache: Dict, dtype=jnp.bfloat16):
 # subtree) never quantize and are excluded from both sides of the ratio.
 _KV_PAYLOAD_LEAVES = frozenset({"k", "v", "k_codes", "v_codes",
                                 "k_scale", "v_scale"})
-_META_LEAVES = frozenset({"pos"})
+# ``page_table`` is the paged layout's (serve/kv_pool.py) logical->physical
+# map; like ``pos`` it is bookkeeping, not payload, so it lands in the meta
+# bucket and the payload ratio stays an apples-to-apples K/V comparison.
+_META_LEAVES = frozenset({"pos", "page_table"})
 
 
 def _leaf_bytes(v) -> int:

@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -109,11 +109,21 @@ class SlotState:
 
 
 class Scheduler:
-    """Admission queue + slot free-list + per-slot lifecycle state."""
+    """Admission queue + slot free-list + per-slot lifecycle state.
 
-    def __init__(self, max_batch: int):
+    ``can_admit``: optional capacity callback consulted at admission time
+    for the request at the head of the queue — a free batch slot alone is
+    not always enough (the paged KV engine also needs the page pool to
+    cover the prompt's pages, DESIGN.md §13). When it returns False,
+    admission stops for this step (head-of-line blocking, preserving
+    FIFO) and retries next step once capacity frees up.
+    """
+
+    def __init__(self, max_batch: int,
+                 can_admit: Optional[Callable[[Request], bool]] = None):
         assert max_batch > 0
         self.max_batch = max_batch
+        self.can_admit = can_admit
         self._queue: List[Tuple[int, int, Request]] = []   # heap
         self._ticket = itertools.count()
         self._next_id = itertools.count()
@@ -169,6 +179,9 @@ class Scheduler:
         admitted = []
         while self.free_slots and self._queue \
                 and self._queue[0][0] <= self.step_count:
+            if self.can_admit is not None \
+                    and not self.can_admit(self._queue[0][2]):
+                break                      # head-of-line waits for capacity
             _, _, req = heapq.heappop(self._queue)
             slot = self.free_slots.pop()
             self.slots[slot] = SlotState(req, admitted_step=self.step_count)

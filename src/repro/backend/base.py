@@ -62,6 +62,21 @@ OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
 _OP_IMPL_HOOK = {"noise_inject": "_noise_inject_fwd",
                  "fake_quant": "_fake_quant_fwd"}
 
+# Trace-time dispatch counter for the draft (low-slice) serve forward:
+# incremented by the shared ``packed_matmul`` driver whenever
+# ``qcfg.draft_slice_bits`` filtered the segment list — CI's speculative
+# leg asserts the draft path actually engaged (mirrors the kernel
+# counters in ``repro.backend.pallas``, but lives here because the slice
+# happens in the driver, identically on every backend).
+_DRAFT_MATMUL_CALLS = 0
+
+
+def draft_matmul_call_count() -> int:
+    """How many packed matmuls were traced in draft (low-slice) mode —
+    the high-bit carriers skipped per ``QuantConfig.draft_slice_bits``
+    (DESIGN.md §14). Counted at trace time, not per executed step."""
+    return _DRAFT_MATMUL_CALLS
+
 
 class BackendUnavailable(RuntimeError):
     """An explicitly selected backend cannot run here (wrong platform,
@@ -378,6 +393,19 @@ class Backend:
         snap-to-grid moves into the segment kernel's prologue) taken when
         the backend carries ``fused_act_segment_matmul`` and
         ``qcfg.fuse_act_quant`` allows it.
+
+        Draft mode (``qcfg.draft_slice_bits`` — DESIGN.md §14): segments
+        whose precision exceeds the bound are skipped, so the GEMM reads
+        only the low-bit carriers of the SAME packed buffers — the
+        embedded draft model of self-speculative decoding. Nothing is
+        renormalized and the activation path is untouched (the per-token
+        scale spans the full permuted row either way); a layer holding
+        only high-bit segments (e.g. the narrow all-4-bit single-group
+        layers) keeps its full mix — it has no cheap slice, and a
+        bias-only output would wreck the draft signal downstream of it.
+        Skipping happens here, before the in-kernel-scale gate, so a
+        filtered single segment that no longer spans K cannot take the
+        self-scale path.
         """
         bufs = {name: serve_params[name] for name, _p, _v in
                 pack_lib.SEGMENTS}
@@ -385,6 +413,13 @@ class Backend:
                 for name, _p, v in pack_lib.SEGMENTS)
         g = qcfg.eff_group_size(k)
         segs = list(pack_lib.iter_packed_segments(bufs, g))
+        draft_bits = getattr(qcfg, "draft_slice_bits", None)
+        if draft_bits is not None:
+            global _DRAFT_MATMUL_CALLS
+            _DRAFT_MATMUL_CALLS += 1
+            low = [s for s in segs if s[1] <= draft_bits]
+            if low:
+                segs = low
         x = jnp.take(x, serve_params["perm"], axis=-1)
         fused = False
         self_scale = False

@@ -82,6 +82,18 @@ class QuantConfig:
     # it to measure the fusion delta, parity tests to pin the exactness.
     fuse_act_quant: bool = True
 
+    # Self-speculative draft forward (DESIGN.md §14). None = the full
+    # packed mix (status quo). An int (2 being the natural SONIQ cut)
+    # makes every serve-phase packed matmul read ONLY the segments whose
+    # precision is <= this bound — the [K2|K1] slice of the same packed
+    # carriers, zero extra weight bytes. The high-bit carriers are simply
+    # skipped (no renormalization: it is the same kernel over fewer
+    # segments), so the output is a cheap approximation of the full-mix
+    # forward at a fraction of the weight traffic. Used by the engine's
+    # draft steps; verification always runs the full mix, which is what
+    # keeps speculative greedy decode token-identical.
+    draft_slice_bits: Optional[int] = None
+
     # DEPRECATED — legacy boolean knob, superseded by ``backend``.
     # use_pallas=True is interpreted as backend="pallas" when ``backend``
     # is unset.
@@ -102,6 +114,8 @@ class QuantConfig:
         assert self.group_size % 2 == 0
         assert self.backend is None or isinstance(self.backend, str), \
             self.backend  # names are validated by the registry at resolve
+        assert self.draft_slice_bits is None \
+            or self.draft_slice_bits in ALLOWED_BITS, self.draft_slice_bits
 
     @property
     def backend_name(self) -> Optional[str]:

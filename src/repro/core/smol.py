@@ -216,7 +216,13 @@ def _linear_serve(params, x, qcfg, rng):
     the segment kernel's prologue instead of a separate full-tensor
     ``fake_quant`` pass per decode step. Segment order and activation
     scaling live in the driver, so backends agree token-for-token at fp32
-    (DESIGN.md §11 "Fused activation quantization")."""
+    (DESIGN.md §11 "Fused activation quantization").
+
+    When ``qcfg.draft_slice_bits`` is set (self-speculative draft
+    forward, DESIGN.md §14), the driver runs the same segment loop over
+    only the segments at or below that precision — the low-bit slice of
+    the same packed carriers. Nothing changes here: the flag rides the
+    qcfg this rule already threads through."""
     return _backend(qcfg).packed_matmul(params, x, qcfg)
 
 

@@ -12,6 +12,13 @@ step at defaults (bm=bk=256, bn=128, f32):
     x 256x256x4 = 256 KiB, wp <= 256x128 = 32 KiB, out 256x128x4 = 128 KiB,
     unpacked w 256x128x4 = 128 KiB  ->  ~0.6 MiB of ~16 MiB VMEM.
 MXU dims (bm, bk, bn) are multiples of 128/8 as required.
+
+These kernels are segment-oblivious by design: the draft (low-slice)
+forward of self-speculative decoding (DESIGN.md §14) is NOT a new kernel —
+the shared ``Backend.packed_matmul`` driver simply invokes the same
+segment GEMMs over only the segments whose precision is within
+``QuantConfig.draft_slice_bits``, skipping the high-bit carriers. Weight
+traffic drops with the skipped bytes; per-segment arithmetic is unchanged.
 """
 from __future__ import annotations
 

@@ -393,6 +393,29 @@ def prefill_step(params, cfg, cache: Dict, tokens, pos, last_idx, *,
     return lg, new_cache
 
 
+def verify_step(params, cfg, cache: Dict, tokens, pos, *,
+                inplace_cache: bool = False):
+    """Speculative-verify forward (DESIGN.md §14): identical cache-write
+    semantics to ``prefill_step`` (tokens [B, C], pos [B, C] with -1
+    padding lanes whose writes are dropped), but returns fp32 logits for
+    EVERY lane — [B, C, V] — instead of only each slot's last token. The
+    engine's verify call needs per-position logits to score k draft
+    tokens in one batched full-mix step; the same call doubles as a
+    chunked-prefill feed for prefill-phase slots riding along (they just
+    ignore all but their last real lane). C is small (spec_tokens + 1),
+    so the [B, C, V] readout the chunked-loss machinery exists to avoid
+    is fine here.
+
+    Requires ``supports_chunked_prefill(cfg)`` — the engine gates this."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dt)            # [B,C,D]
+    x, new_cache = _decode_core(params, cfg, cache, x, pos,
+                                inplace_cache=inplace_cache)
+    x = _norm(cfg, params["final_norm"], x)
+    lg = _readout(params, cfg, x)                            # [B,C,V]
+    return lg, new_cache
+
+
 def reset_cache_slots(cache: Dict, slots):
     """Wipe the cache rows of the given batch slots (request admission /
     eviction in the continuous-batching engine). Ring cache leaves are

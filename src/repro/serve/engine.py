@@ -36,7 +36,7 @@ from repro.core.qtypes import QuantConfig
 from repro.models import lm
 
 from . import kv_pool
-from .scheduler import Completion, Request, Scheduler
+from .scheduler import DECODE, Completion, Request, Scheduler
 
 
 def _paged_geometry(arch_cfg, ecfg: "EngineConfig"):
@@ -120,6 +120,19 @@ class EngineConfig:
     # then never run out, occupancy is the win). Smaller pools gate
     # admission on page availability (head-of-line, FIFO preserved).
     num_pages: Optional[int] = None
+    # Self-speculative decoding (DESIGN.md §14). 0 disables (status quo).
+    # k > 0 makes each decode round draft k tokens with the low-slice
+    # forward (the [K<=spec_draft_bits] segments of the SAME packed
+    # carriers — zero extra weight bytes), then verify them in ONE
+    # batched full-mix step; the longest matching prefix plus the verify
+    # step's own token commit (1..k+1 tokens per round). Greedy streams
+    # are token-identical to spec_tokens=0; temperature > 0 runs standard
+    # rejection sampling (distribution-correct, not bitwise-equal).
+    # DecodeEngine only; needs lm.supports_chunked_prefill (the verify
+    # step feeds k+1 tokens per slot in one forward).
+    spec_tokens: int = 0
+    # Precision bound of the draft slice: segments above this skip.
+    spec_draft_bits: int = 2
 
 
 class _PackedEngine:
@@ -217,6 +230,15 @@ def _key_bits(key) -> np.ndarray:
     return np.asarray(key, np.uint32)
 
 
+def _softmax(x: np.ndarray) -> np.ndarray:
+    """Numerically stable host-side softmax over the last axis (the
+    speculative acceptance rule runs on host — DESIGN.md §14)."""
+    x = np.asarray(x, np.float64)
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
 def _sample_tokens(logits, keys, temps, counts):
     """Per-slot sampling: greedy where temp <= 0, else categorical with the
     slot's request key folded by its generated-token index (scheduling-
@@ -253,6 +275,41 @@ class DecodeEngine(_PackedEngine):
                       if lm.supports_chunked_prefill(self.cfg) else 1)
         b = ecfg.max_batch
 
+        # Self-speculative decoding (DESIGN.md §14): a draft step running
+        # the low-slice forward (same packed weights, high-bit carriers
+        # skipped) and a verify step returning per-lane full-mix logits.
+        self.spec_width = ecfg.spec_tokens + 1
+        if ecfg.spec_tokens > 0:
+            if not lm.supports_chunked_prefill(self.cfg):
+                raise ValueError(
+                    "spec_tokens > 0 needs chunked prefill: the batched "
+                    "verify step feeds k+1 tokens per slot in one forward, "
+                    "and this arch family is strictly sequential "
+                    "(lm.supports_chunked_prefill — DESIGN.md §14)")
+            if self.spec_width > ecfg.cache_len:
+                raise ValueError(
+                    f"spec_tokens={ecfg.spec_tokens} cannot exceed "
+                    f"cache_len-1={ecfg.cache_len - 1}")
+            self._draft_cfg = dataclasses.replace(
+                self.cfg, quant=dataclasses.replace(
+                    self.cfg.quant,
+                    draft_slice_bits=ecfg.spec_draft_bits))
+
+            # Both return (argmax tokens, logits, cache): at temp 0 only
+            # the tiny int argmaxes cross to host; the logits stay on
+            # device unless a slot actually samples (rejection sampling).
+            def draft_step(p, c, t, pos, act):
+                lg, c2 = lm.decode_step(p, self._draft_cfg, c, t, pos,
+                                        active=act)
+                return jnp.argmax(lg, -1).astype(jnp.int32), lg, c2
+
+            def verify_step(p, c, t, pos):
+                lg, c2 = lm.verify_step(p, self.cfg, c, t, pos)
+                return jnp.argmax(lg, -1).astype(jnp.int32), lg, c2
+
+            self._draft = jax.jit(draft_step)
+            self._verify = jax.jit(verify_step)
+
         # Sampling is fused into the jitted step: one dispatch and one
         # [B]-int transfer per engine step (the decode loop is host-latency
         # bound at small batch).
@@ -287,12 +344,20 @@ class DecodeEngine(_PackedEngine):
             self.pool = kv_pool.PagePool(npages, ps, pps, b)
             self.sched = Scheduler(b, can_admit=self.pool.admissible)
             # Per-step device-op capacities (fixed jit shapes): each
-            # planned slot touches at most ceil(chunk/page) + 1 pages.
-            self._op_cap = b * (-(-max(self.chunk, 1) // ps) + 1)
+            # planned slot touches at most ceil(width/page) + 1 pages,
+            # where the step width is the prefill chunk — or the
+            # speculative round width k+1 when that is larger.
+            w = max(self.chunk, getattr(self, "spec_width", 1), 1)
+            self._op_cap = b * (-(-w // ps) + 1)
             self._table_dirty = True       # first flush uploads the table
         else:
             self.pool = None
             self.sched = Scheduler(b)
+        # Speculation telemetry (benchmarks record the mean accepted
+        # draft length next to tokens/s).
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
     # --------------------------------------------------------- requests ----
     def submit(self, request: Request) -> int:
@@ -361,6 +426,11 @@ class DecodeEngine(_PackedEngine):
         prompt pages register in the prefix map and finished slots release
         their pages (back to the free list, or parked in the cached LRU
         when registered — poisoned in ``SONIQ_KV_POISON=1`` debug mode).
+
+        ``spec_tokens > 0`` routes the step through the speculative
+        draft-k/verify-1 round instead (DESIGN.md §14) — same admission,
+        same completions contract, 1..k+1 tokens committed per decoding
+        slot per step.
         """
         b = self.ecfg.max_batch
         if self.cache is None:
@@ -382,6 +452,8 @@ class DecodeEngine(_PackedEngine):
                         # pages — prefill starts after them.
                         self.sched.slots[slot].n_fed = shared
                         self._table_dirty = True
+        if self.ecfg.spec_tokens > 0:
+            return self._spec_step()
         plan = self.sched.plan(self.chunk)
         if not plan:                       # idle: let queued arrivals age in
             return self.sched.advance({}, {})
@@ -434,24 +506,266 @@ class DecodeEngine(_PackedEngine):
         done = self.sched.advance(
             widths, {s: int(sampled[s]) for s in plan})
         if self.pool is not None:
-            ops = kv_pool.StepOps()
-            for c in done:
-                slot = slot_of.get(c.request_id)
-                if slot is None:           # zero-generation immediate
-                    continue
-                # Register the finished prompt's full pages before the
-                # release parks them in the cached LRU for future hits.
-                self.pool.note_filled(slot, c.request.prompt,
-                                      fed_of[c.request_id])
-                self.pool.release(slot, ops)
-                self._table_dirty = True
-            for slot in plan:
-                st = self.sched.slots.get(slot)
-                if st is not None:
-                    self.pool.note_filled(slot, st.request.prompt,
-                                          st.n_fed)
-            self._flush_pool_ops(ops)
+            self._paged_after_advance(done, slot_of, fed_of, plan,
+                                      kv_pool.StepOps())
         return done
+
+    def _paged_after_advance(self, done, slot_of, fed_of, plan, ops):
+        """Post-advance pool bookkeeping shared by both step flavors:
+        register finished prompts' full pages (before release parks them
+        in the cached LRU for future hits) and release their pages,
+        register freshly completed prompt pages of still-active slots,
+        then flush the accumulated device ops."""
+        for c in done:
+            slot = slot_of.get(c.request_id)
+            if slot is None:               # zero-generation immediate
+                continue
+            self.pool.note_filled(slot, c.request.prompt,
+                                  fed_of[c.request_id])
+            self.pool.release(slot, ops)
+            self._table_dirty = True
+        for slot in plan:
+            st = self.sched.slots.get(slot)
+            if st is not None:
+                self.pool.note_filled(slot, st.request.prompt, st.n_fed)
+        self._flush_pool_ops(ops)
+
+    # ------------------------------------------------------ speculative ----
+    def _spec_rng(self, st, tag: int) -> np.random.Generator:
+        """Deterministic host rng for temperature > 0 speculative
+        sampling, keyed by (request seed, purpose tag, generated count):
+        a request's stream depends only on its own state — never on batch
+        composition (the scheduling-invariance contract of DESIGN.md
+        §10). Spec-mode temp > 0 streams are distribution-correct but
+        NOT bitwise-equal to the spec-off device sampler (§14)."""
+        return np.random.default_rng(
+            (int(st.request.seed) & 0x7FFFFFFF, tag, len(st.generated)))
+
+    def _accept(self, st, drafts, dprobs, targets, lg_rows, rng):
+        """Acceptance rule for one slot's k drafts given the verify
+        argmaxes ``targets`` [k+1] and (temp > 0 only) the verify logits
+        ``lg_rows`` [k+1, V] — lane j is the full-mix distribution of
+        the token FOLLOWING draft j. Returns the committed token list
+        (accepted prefix + one bonus/correction token — 1..k+1 tokens).
+
+        temp 0: longest prefix of drafts matching the verify argmaxes,
+        then the argmax at the first mismatch (correction) or after the
+        last draft (bonus) — exactly the token-by-token greedy stream.
+        temp > 0: standard speculative rejection sampling — accept draft
+        d with prob min(1, q(d)/p(d)); on reject, sample the residual
+        max(q - p, 0); if all accepted, sample the bonus from q."""
+        t = st.request.temperature
+        committed = []
+        if t <= 0:
+            a = 0
+            while a < len(drafts) and drafts[a] == int(targets[a]):
+                committed.append(drafts[a])
+                a += 1
+            committed.append(int(targets[a]))
+            return committed
+        for j, d in enumerate(drafts):
+            q = _softmax(lg_rows[j] / t)
+            p = dprobs[j]
+            if rng.random() < q[d] / max(p[d], 1e-30):
+                committed.append(d)
+                continue
+            resid = np.maximum(q - p, 0.0)
+            tot = resid.sum()
+            probs = resid / tot if tot > 0 else q
+            committed.append(int(rng.choice(len(q), p=probs)))
+            return committed
+        q = _softmax(lg_rows[len(drafts)] / t)
+        committed.append(int(rng.choice(len(q), p=q)))
+        return committed
+
+    def _spec_step(self) -> List[Completion]:
+        """One speculative engine round (DESIGN.md §14): draft k tokens
+        per decoding slot with the low-slice forward, verify them in ONE
+        batched full-mix ``lm.verify_step`` of fixed width k+1 (which
+        doubles as the chunked-prefill feed for prompt-phase slots riding
+        the same call), commit the accepted prefix + the verify step's
+        own token, and roll the rejected suffix back (ring: pure
+        accounting — rejected entries carry future position stamps the
+        causal mask excludes until legitimately overwritten; paged:
+        wholly-stale freshly-allocated pages release).
+
+        A slot whose round would wrap the KV ring cannot draft (the
+        wrap-clobbered history could not be restored on rejection); it
+        rides the verify step with just its own token — a plain full-mix
+        decode step, so the guard never costs correctness."""
+        b = self.ecfg.max_batch
+        k = self.ecfg.spec_tokens
+        c = self.spec_width                             # k + 1
+        plan = self.sched.plan(c)
+        if not plan:                       # idle: let queued arrivals age in
+            return self.sched.advance({}, {})
+        clen = min(self.ecfg.cache_len, self.cfg.window) \
+            if self.cfg.window else self.ecfg.cache_len
+        base_fed = {s: self.sched.slots[s].n_fed for s in plan}
+        decode_slots = [s for s in plan
+                        if self.sched.slots[s].phase == DECODE]
+        draft_slots = [s for s in decode_slots if base_fed[s] + c <= clen]
+
+        if self.pool is not None:
+            ops = kv_pool.StepOps()
+            for s in plan:
+                w = c if s in draft_slots else \
+                    (1 if s in decode_slots else len(plan[s]))
+                self.pool.prepare(s, base_fed[s], w, ops)
+            if ops.any():
+                self._table_dirty = True
+            self._flush_pool_ops(ops)
+
+        # --- draft sub-steps: low-slice forward, decode-phase slots only
+        # (a draft write to a PROMPT position would never be rewritten by
+        # verify, so prefill-phase slots sit out with pos = -1).
+        cur = np.zeros((b,), np.int32)
+        for s in decode_slots:
+            cur[s] = int(plan[s][0])
+        hot = [s for s in decode_slots
+               if self.sched.slots[s].request.temperature > 0]
+        round_rng = {s: self._spec_rng(self.sched.slots[s], 0x5EC)
+                     for s in hot}
+        drafts = {s: [] for s in draft_slots}
+        dprobs = {s: [] for s in draft_slots}
+        active = np.zeros((b,), bool)
+        for s in draft_slots:
+            active[s] = True
+        if draft_slots:
+            for j in range(k):
+                pos = np.zeros((b,), np.int32)
+                for s in draft_slots:
+                    pos[s] = base_fed[s] + j
+                gr, lg, self.cache = self._draft(self.params, self.cache,
+                                                 cur, pos, active)
+                gr = np.asarray(gr)
+                lgh = np.asarray(lg, np.float32) if hot else None
+                for s in draft_slots:
+                    if self.sched.slots[s].request.temperature > 0:
+                        p = _softmax(
+                            lgh[s] / self.sched.slots[s].request.temperature)
+                        tok = int(round_rng[s].choice(len(p), p=p))
+                        dprobs[s].append(p)
+                    else:
+                        tok = int(gr[s])
+                    drafts[s].append(tok)
+                    cur[s] = tok
+
+        # --- one batched full-mix verify (+ prefill feed) step
+        tokens = np.zeros((b, c), np.int32)
+        pos = np.full((b, c), -1, np.int32)
+        for s, toks in plan.items():
+            feed = [int(plan[s][0])] + drafts[s] if s in draft_slots \
+                else [int(x) for x in toks[:c]]
+            tokens[s, :len(feed)] = feed
+            pos[s, :len(feed)] = base_fed[s] + np.arange(len(feed))
+        gr, lg, self.cache = self._verify(self.params, self.cache,
+                                          tokens, pos)
+        gr = np.asarray(gr)                             # [B, C] argmaxes
+        need_lg = bool(hot) or any(
+            self.sched.slots[s].request.temperature > 0 for s in plan
+            if s not in decode_slots)
+        lgh = np.asarray(lg, np.float32) if need_lg else None   # [B, C, V]
+
+        # --- host-side acceptance + commit
+        fed = {}
+        sampled = {}
+        for s, toks in plan.items():
+            st = self.sched.slots[s]
+            if s not in decode_slots:
+                n = len(toks)
+                fed[s] = n
+                if st.n_fed + n >= len(st.request.prompt):
+                    # Prompt completes this step: its last lane's logits
+                    # seed sampling (argmax at temp 0 — identical to the
+                    # device sampler's greedy branch).
+                    sampled[s] = int(gr[s, n - 1]) \
+                        if st.request.temperature <= 0 \
+                        else self._pick(st, lgh[s, n - 1])
+                continue
+            committed = self._accept(st, drafts.get(s, []),
+                                     dprobs.get(s, []), gr[s],
+                                     None if lgh is None else lgh[s],
+                                     round_rng.get(s))
+            a = len(committed) - 1          # accepted drafts
+            fed[s] = 1 + a
+            sampled[s] = committed
+            if s in draft_slots:
+                self.spec_rounds += 1
+                self.spec_drafted += k
+                self.spec_accepted += a
+                if self.pool is not None and a < k:
+                    self._table_dirty = True
+
+        # --- paged rollback of wholly-rejected pages, then advance
+        slot_of = {st.request.request_id: s
+                   for s, st in self.sched.slots.items()}
+        fed_of = {st.request.request_id: st.n_fed + fed.get(s, 0)
+                  for s, st in self.sched.slots.items()}
+        ops = kv_pool.StepOps()
+        if self.pool is not None:
+            for s in draft_slots:
+                self.pool.rollback(s, base_fed[s] + fed[s],
+                                   base_fed[s] + c, ops)
+        done = self.sched.advance(fed, sampled)
+        if self.pool is not None:
+            self._paged_after_advance(done, slot_of, fed_of, plan, ops)
+        return done
+
+    def _pick(self, st, lg_row) -> int:
+        """Sample one token from a host-side fp32 logits row with the
+        slot's params (greedy argmax at temp 0; host rng otherwise)."""
+        t = st.request.temperature
+        if t <= 0:
+            return int(np.argmax(lg_row))
+        p = _softmax(lg_row / t)
+        return int(self._spec_rng(st, 0x9EF).choice(len(p), p=p))
+
+    def spec_stats(self) -> dict:
+        """Speculation telemetry: rounds drafted, draft tokens proposed /
+        accepted, and the mean accepted draft length per round (the
+        benchmark's acceptance figure — k accepted means every draft
+        survived verification)."""
+        return {
+            "spec_tokens": self.ecfg.spec_tokens,
+            "rounds": self.spec_rounds,
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "mean_accepted": (self.spec_accepted / self.spec_rounds
+                              if self.spec_rounds else 0.0),
+        }
+
+    # ----------------------------------------------------- cancellation ----
+    def cancel(self, request_id: int) -> Optional[Completion]:
+        """Cancel a request by id — queued or active — releasing every
+        resource it holds. A queued request leaves the admission queue
+        (and, paged, drops its memoized digests + any admissible()
+        reservation); an active one frees its batch slot AND routes its
+        pool pages through ``PagePool.release`` with the device table
+        re-uploaded before the next step — ``Scheduler.evict`` alone
+        would leak them (refcount drift, ``PagePool.check()`` asserts).
+        Returns the "evicted" Completion, or None when the id is unknown
+        or already finished. Call between engine steps."""
+        comp = self.sched.cancel(request_id)
+        if comp is not None:
+            if self.pool is not None:
+                self.pool.forget_submit(request_id)
+            return comp
+        slot = next((s for s, st in self.sched.slots.items()
+                     if st.request.request_id == request_id), None)
+        if slot is None:
+            return None
+        if self.pool is not None:
+            ops = kv_pool.StepOps()
+            # A cancelled slot's finished prompt pages still register
+            # (they are valid shared-prefix content for future requests);
+            # mid-prefill slots simply have no full pages to offer.
+            st = self.sched.slots[slot]
+            self.pool.note_filled(slot, st.request.prompt, st.n_fed)
+            self.pool.release(slot, ops)
+            self._table_dirty = True
+            self._flush_pool_ops(ops)
+        return self.sched.evict(slot)
 
     # ---------------------------------------------------------- metrics ----
     def paged_kv_stats(self) -> dict:

@@ -453,15 +453,28 @@ class PagePool:
         ``Scheduler.admit`` checks each head-of-queue request in a loop
         before the engine runs any ``admit()``, so without the
         reservation the second request of a step would not see the
-        first's demand and a tight pool could be overcommitted."""
+        first's demand and a tight pool could be overcommitted.
+
+        Cached-LRU pages this request's own prefix would REVIVE must not
+        also count as evictable: admit() takes a reference on each
+        shareable page, so a parked (refcount 0) prefix hit leaves the
+        LRU the moment the request is admitted — subtracting it from
+        ``need`` as shareable while counting it in ``avail`` as
+        evictable double-counts the page, and on a tight pool
+        (free = 0, cached = the prefix pages) that admits a request
+        whose first fresh allocation then dies with the mid-step
+        pool-exhausted RuntimeError."""
         prompt = np.asarray(request.prompt).reshape(-1)
         rid = getattr(request, "request_id", None)
         hashes = self._hash_memo.get(rid)
         if hashes is None:
             hashes = self.page_hashes(prompt)
-        need = self.target_pages(len(prompt)) \
-            - self._shareable(prompt, hashes)
-        avail = len(self.free) + len(self.cached) \
+        shareable = self._shareable(prompt, hashes)
+        revived = sum(
+            1 for i in range(shareable)
+            if self.refcount[self.prefix_map[hashes[i]]] == 0)
+        need = self.target_pages(len(prompt)) - shareable
+        avail = len(self.free) + (len(self.cached) - revived) \
             - self._outstanding_prompt_pages()
         ok = need <= avail
         if ok and rid is not None:
@@ -618,6 +631,44 @@ class PagePool:
                 continue                        # another copy is canonical
             self.prefix_map[hashes[i]] = pid
             self.page_hash[pid] = hashes[i]
+
+    def forget_submit(self, request_id: int) -> None:
+        """Cancellation of a still-queued request: drop its memoized page
+        digests and any :meth:`admissible` reservation — the matching
+        :meth:`admit` will never run to consume them, and a dangling
+        reservation would hold back capacity forever."""
+        self._hash_memo.pop(request_id, None)
+        self._pending.pop(request_id, None)
+
+    def rollback(self, slot: int, committed: int, touched: int,
+                 ops: StepOps) -> None:
+        """Speculative rollback (DESIGN.md §14): a verify pass rejected a
+        draft suffix, so the slot's committed content ends at fed count
+        ``committed`` while this round's writes reached positions
+        ``[0, touched)``. Unmap (and unref) every logical page WHOLLY
+        beyond the committed content that the round touched — those hold
+        only rejected-draft KV. The boundary page (partially committed)
+        stays mapped: its stale tail entries carry future position
+        stamps, which the causal mask excludes until the positions are
+        legitimately rewritten (the same argument that makes the ring
+        layout's rollback pure accounting).
+
+        Only valid when the round did not wrap the logical ring
+        (``touched <= pages_per_seq * page_size`` — the engine's spec
+        guard): after a wrap, a "stale" logical page also holds the only
+        copy of older in-window history and must not be dropped. Every
+        page touched this round came out of :meth:`prepare` private and
+        unregistered, so the unref frees it outright (COW guarantees a
+        shared prefix page was never written in the first place)."""
+        assert 0 <= committed <= touched
+        assert touched <= self.pages_per_seq * self.page_size, \
+            (touched, self.pages_per_seq * self.page_size)
+        first_stale = pages_for(committed, self.page_size)
+        for lp in range(first_stale, pages_for(touched, self.page_size)):
+            pid = int(self.table[slot, lp])
+            if pid >= 0:
+                self._unref(pid, ops)
+                self.table[slot, lp] = -1
 
     def release(self, slot: int, ops: StepOps) -> None:
         """Drop every page reference of a finished/evicted slot.

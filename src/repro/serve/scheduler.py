@@ -73,7 +73,7 @@ class Completion:
     request: Request
     tokens: np.ndarray          # [S0 + num generated] prompt + generated
     new_tokens: np.ndarray      # [num generated]
-    finish_reason: str          # "length" | "eos"
+    finish_reason: str          # "length" | "eos" | "evicted"
     finished_step: int          # engine step at which the request finished
     steps: int                  # engine steps the request occupied a slot
 
@@ -196,13 +196,19 @@ class Scheduler:
                 for s, st in self.slots.items()}
 
     # ------------------------------------------------------ advancement ----
-    def advance(self, fed: Dict[int, int], sampled: Dict[int, int]
+    def advance(self, fed: Dict[int, int], sampled: Dict[int, object]
                 ) -> List[Completion]:
         """Commit one engine step: ``fed[slot]`` tokens entered the cache,
         ``sampled[slot]`` is the token drawn from the slot's last-token
-        logits (ignored for slots still mid-prefill). Returns completions
-        (including any immediately-completed zero-generation submissions);
-        their slots go back on the free-list (reusable next step)."""
+        logits (ignored for slots still mid-prefill) — or, in a
+        speculative round (DESIGN.md §14), the ordered LIST of committed
+        tokens (accepted drafts + the verify bonus/correction token).
+        Each committed token is checked against eos / ``max_new_tokens``
+        in order; a terminal token truncates the rest of the list. One
+        call is one engine step regardless of how many tokens it commits.
+        Returns completions (including any immediately-completed
+        zero-generation submissions); their slots go back on the
+        free-list (reusable next step)."""
         done: List[Completion] = self._immediate
         self._immediate = []
         for slot, n in fed.items():
@@ -210,26 +216,55 @@ class Scheduler:
             st.n_fed += n
             if not st.samples_this_step:
                 continue                       # still prefilling
-            tok = int(sampled[slot])
-            st.generated.append(tok)
             req = st.request
-            eos = req.eos_id is not None and tok == req.eos_id
-            if eos or len(st.generated) >= req.max_new_tokens:
-                done.append(self._finish(slot, "eos" if eos else "length"))
+            reason = None
+            for tok in np.atleast_1d(np.asarray(sampled[slot], np.int64)):
+                st.generated.append(int(tok))
+                eos = req.eos_id is not None and int(tok) == req.eos_id
+                if eos or len(st.generated) >= req.max_new_tokens:
+                    reason = "eos" if eos else "length"
+                    break
+            if reason is not None:
+                done.append(self._finish(slot, reason))
         self.step_count += 1
         return done
 
-    def _finish(self, slot: int, reason: str) -> Completion:
+    def _finish(self, slot: int, reason: str, *,
+                in_step: bool = True) -> Completion:
         st = self.slots.pop(slot)
         self.free_slots.append(slot)
         new = np.asarray(st.generated, np.int32)
+        # ``steps`` counts the engine steps the slot was occupied for.
+        # Finishing DURING a step (advance), step_count has not yet been
+        # incremented for the step that just ran — hence the +1. Between
+        # steps (evict), step_count already covers every step the slot
+        # ran; a +1 there would count a step the slot never ran.
         return Completion(
             request_id=st.request.request_id, request=st.request,
             tokens=np.concatenate([st.request.prompt, new]),
             new_tokens=new, finish_reason=reason,
             finished_step=self.step_count,
-            steps=self.step_count - st.admitted_step + 1)
+            steps=self.step_count - st.admitted_step + (1 if in_step else 0))
 
     def evict(self, slot: int) -> Completion:
-        """Force-finish a slot (admin path: cancellation / preemption)."""
-        return self._finish(slot, "evicted")
+        """Force-finish a slot (admin path: cancellation / preemption).
+        Called BETWEEN engine steps — never from inside ``advance``."""
+        return self._finish(slot, "evicted", in_step=False)
+
+    def cancel(self, request_id: int) -> Optional[Completion]:
+        """Remove a still-QUEUED request (never admitted): its "evicted"
+        zero-generation Completion, or None when the id is not in the
+        queue (already admitted, finished, or unknown — an admitted
+        request is cancelled through the engine, which must release the
+        slot's cache resources before calling :meth:`evict`)."""
+        for i, (_, _, req) in enumerate(self._queue):
+            if req.request_id == request_id:
+                self._queue.pop(i)
+                heapq.heapify(self._queue)
+                return Completion(
+                    request_id=request_id, request=req,
+                    tokens=req.prompt.copy(),
+                    new_tokens=np.zeros((0,), np.int32),
+                    finish_reason="evicted",
+                    finished_step=self.step_count, steps=0)
+        return None

@@ -112,9 +112,11 @@ def test_pool_poison_ops_and_realloc_cancellation():
 
 # A deterministic allocator fuzz driver shared by the always-on seeded
 # test and the hypothesis property test: random interleavings of
-# admission (some with shared prompts), prefill/decode prepares and
-# releases, with pool.check() asserting the partition/refcount invariants
-# after every operation.
+# admission (some with shared prompts), prefill/decode prepares,
+# speculative rollbacks (a prepared suffix un-commits, DESIGN.md §14),
+# engine-style cancels (note_filled + release mid-flight) and releases,
+# with pool.check() asserting the partition/refcount invariants after
+# every operation.
 def _run_pool_program(seed, num_pages, page_size, pages_per_seq,
                       max_batch, n_ops):
     rng = np.random.default_rng(seed)
@@ -127,7 +129,7 @@ def _run_pool_program(seed, num_pages, page_size, pages_per_seq,
     rid = 0
     for _ in range(n_ops):
         ops = kv_pool.StepOps()
-        kind = rng.choice(["admit", "feed", "release"])
+        kind = rng.choice(["admit", "feed", "release", "cancel"])
         if kind == "admit" and len(active) < max_batch:
             slot = next(s for s in range(max_batch) if s not in active)
             prompt = prompts[int(rng.integers(0, len(prompts)))]
@@ -157,8 +159,26 @@ def _run_pool_program(seed, num_pages, page_size, pages_per_seq,
                 assert pool.refcount[dst] == 1
                 assert dst not in pool.page_hash
             assert not (set(ops.poisons) & set(ops.wipes))
-            active[slot][1] = n_fed + width
-            pool.note_filled(slot, prompt, active[slot][1])
+            fed = n_fed + width
+            if fed <= pages_per_seq * page_size and rng.random() < 0.4:
+                # Speculative rollback: the verify pass rejected a random
+                # suffix of this round's writes (no-wrap rounds only —
+                # the engine's spec guard, DESIGN.md §14).
+                committed = int(rng.integers(n_fed, fed + 1))
+                rops = kv_pool.StepOps()
+                pool.rollback(slot, committed, fed, rops)
+                pool.check()
+                fed = committed
+            active[slot][1] = fed
+            pool.note_filled(slot, prompt, fed)
+        elif kind == "cancel" and active:
+            # The engine's cancel path: finished prompt pages register,
+            # then every page reference drops (DecodeEngine.cancel).
+            slot = int(rng.choice(sorted(active)))
+            prompt, n_fed = active[slot]
+            pool.note_filled(slot, prompt, n_fed)
+            pool.release(slot, ops)
+            del active[slot]
         elif kind == "release" and active:
             slot = int(rng.choice(sorted(active)))
             pool.release(slot, ops)
@@ -230,6 +250,85 @@ def test_pool_same_step_admission_reserves_capacity():
     pool.release(0, ops)
     assert pool.admissible(r1)               # capacity freed up
     pool.check()
+
+
+def test_admissible_own_prefix_pages_not_double_counted():
+    """Regression (the spec-PR lifecycle bug): ``admissible()`` counted a
+    request's own revivable cached-LRU prefix pages twice — once as
+    shareable (subtracted from the demand) and once as evictable (added
+    to the supply). On the repro state — free list empty, cached LRU
+    holding exactly the request's prefix pages — the double count admits
+    the request and its first fresh allocation dies with the mid-step
+    pool-exhausted RuntimeError."""
+    def fill_and_park(pool):
+        p1 = np.arange(8, dtype=np.int32)            # 2 full pages
+        r1 = Request(prompt=p1, max_new_tokens=2, request_id=0)
+        pool.note_submit(0, p1)
+        assert pool.admissible(r1)
+        pool.admit(0, r1)
+        ops = kv_pool.StepOps()
+        pool.prepare(0, 0, 8, ops)
+        pool.note_filled(0, p1, 8)
+        pool.release(0, ops)                          # both pages park
+        return Request(prompt=np.arange(12, dtype=np.int32),
+                       max_new_tokens=2, request_id=1)
+
+    # Repro sizing: capacity 2, so after the fill free=[] and cached =
+    # exactly the 12-token extension's 2 prefix-hit pages. It still
+    # needs 1 fresh page -> must NOT be admissible (revived pages are
+    # not evictable), where the double count said 0 + 2 >= 1.
+    pool = kv_pool.PagePool(3, 4, 3, 1, poison=False)
+    r2 = fill_and_park(pool)
+    assert not pool.free and len(pool.cached) == 2
+    pool.note_submit(1, r2.prompt)
+    assert not pool.admissible(r2)
+    pool.forget_submit(1)
+    pool.check()
+
+    # Control: one genuinely free page makes the same request admissible
+    # and the fresh allocation succeeds.
+    pool = kv_pool.PagePool(4, 4, 3, 1, poison=False)
+    r2 = fill_and_park(pool)
+    assert len(pool.free) == 1
+    pool.note_submit(1, r2.prompt)
+    assert pool.admissible(r2)
+    assert pool.admit(1 - 1, r2) == 8                 # both prefix pages hit
+    ops = kv_pool.StepOps()
+    pool.prepare(0, 8, 4, ops)                        # the fresh page
+    pool.check()
+
+
+def test_pool_rollback_frees_wholly_stale_pages_keeps_boundary():
+    """Speculative rollback (DESIGN.md §14): after a draft round writes
+    positions [committed, touched), every logical page WHOLLY beyond the
+    committed content unmaps and frees; the partially-committed boundary
+    page stays (its stale tail carries future pos stamps the causal mask
+    excludes)."""
+    pool = kv_pool.PagePool(6, 4, 4, 1, poison=False)
+    prompt = np.arange(6, dtype=np.int32)
+    pool.admit(0, Request(prompt=prompt, max_new_tokens=8, request_id=0))
+    ops = kv_pool.StepOps()
+    pool.prepare(0, 0, 6, ops)                        # pages 0, 1 mapped
+    pool.note_filled(0, prompt, 6)
+    ops = kv_pool.StepOps()
+    pool.prepare(0, 6, 4, ops)                        # round: pos 6..9
+    boundary = int(pool.table[0, 1])
+    fresh = int(pool.table[0, 2])
+    assert fresh >= 0
+    free_before = len(pool.free)
+    ops = kv_pool.StepOps()
+    pool.rollback(0, 7, 10, ops)   # verify committed only pos 6 (+bonus)
+    assert int(pool.table[0, 2]) == -1                # wholly stale: freed
+    assert int(pool.table[0, 1]) == boundary          # boundary stays
+    assert len(pool.free) == free_before + 1 and fresh in pool.free
+    pool.check()
+    # committed == touched is a no-op; a wrapped round is rejected (the
+    # engine's draft guard makes it unreachable).
+    table_before = pool.table.copy()
+    pool.rollback(0, 7, 7, ops)
+    np.testing.assert_array_equal(pool.table, table_before)
+    with pytest.raises(AssertionError):
+        pool.rollback(0, 4, 17, ops)                  # 17 > 4 * 4: wrap
 
 
 @pytest.mark.parametrize("seed", range(8))

@@ -1,14 +1,18 @@
-"""Serve path: QAT -> packed conversion -> batched generation."""
+"""Serve path: QAT -> packed conversion -> batched generation — and the
+self-speculative decode round + request cancellation (DESIGN.md §14)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.backend import base as backend_base
 from repro.configs.base import ArchConfig
 from repro.core.qtypes import QuantConfig
 from repro.models import lm
 from repro.serve import engine
+from repro.serve.scheduler import Request
 
 
 def _tiny(mode="qat"):
@@ -17,6 +21,13 @@ def _tiny(mode="qat"):
         num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=32,
         dtype="float32", param_dtype="float32", q_block=32,
         quant=QuantConfig(mode=mode))
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _tiny()
+    params = jax.device_get(lm.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
 
 
 def test_rebudget_pbits_respects_ranking():
@@ -72,3 +83,222 @@ def test_serve_logits_close_to_qat():
     corr = np.corrcoef(np.asarray(lg_qat).ravel(),
                        np.asarray(lg_srv).ravel())[0, 1]
     assert corr > 0.98
+
+
+# ================================== self-speculative decoding (§14) =======
+def _ecfg(**kw):
+    base = dict(max_batch=2, cache_len=32, prefill_chunk=4)
+    base.update(kw)
+    return engine.EngineConfig(**base)
+
+
+def _mixed_requests(rng, lens=(3, 9, 5, 2), news=(6, 9, 4, 7), **kw):
+    return [Request(prompt=rng.integers(1, 100, (l,)), max_new_tokens=n,
+                    seed=i, **kw)
+            for i, (l, n) in enumerate(zip(lens, news))]
+
+
+def _tokens_of(eng, reqs):
+    got = {c.request_id: c.tokens for c in eng.serve(
+        [dataclasses.replace(r) for r in reqs])}
+    return {k - min(got): v for k, v in got.items()}
+
+
+@pytest.mark.parametrize("kv_bits", [None, 4])
+@pytest.mark.parametrize("kv_layout", ["ring", "paged"])
+def test_spec_greedy_token_identity(served, kv_bits, kv_layout):
+    """THE §14 acceptance pin: at temperature 0 the speculative engine's
+    token streams are IDENTICAL to the spec-off engine's — on the ring
+    and the paged layout, at fp and q4 KV alike — from the same packed
+    checkpoint with zero extra weight bytes."""
+    cfg, params = served
+    layout_kw = dict(kv_bits=kv_bits) if kv_layout == "ring" else \
+        dict(kv_bits=kv_bits, kv_layout="paged", page_size=4)
+    reqs = _mixed_requests(np.random.default_rng(0))
+    base = engine.DecodeEngine(params, cfg, _ecfg(**layout_kw))
+    spec = engine.DecodeEngine(params, cfg, _ecfg(
+        spec_tokens=3, spec_draft_bits=2, **layout_kw))
+    want = _tokens_of(base, reqs)
+    got = _tokens_of(spec, reqs)
+    assert set(want) == set(got)
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+    st = spec.spec_stats()
+    assert st["rounds"] > 0 and st["drafted"] == 3 * st["rounds"]
+    # the draft shares every packed carrier: no extra weight memory
+    assert engine.packed_model_bytes(spec.params) == \
+        engine.packed_model_bytes(base.params)
+    if kv_layout == "paged":
+        spec.pool.check()
+
+
+def test_spec_draft_path_dispatched(served):
+    """The draft forward must actually take the low-slice branch of the
+    shared packed_matmul driver (trace-time counter, same pattern as the
+    kernel-dispatch asserts) — and the spec-off engine must never tick
+    it."""
+    cfg, params = served
+    reqs = _mixed_requests(np.random.default_rng(1), lens=(3, 5),
+                           news=(4, 6))
+    before = backend_base.draft_matmul_call_count()
+    base = engine.DecodeEngine(params, cfg, _ecfg())
+    _tokens_of(base, reqs)
+    assert backend_base.draft_matmul_call_count() == before
+    spec = engine.DecodeEngine(params, cfg, _ecfg(spec_tokens=2))
+    _tokens_of(spec, reqs)
+    assert backend_base.draft_matmul_call_count() > before
+
+
+def test_spec_ring_wrap_guard_keeps_parity(served):
+    """A decoding slot whose draft round would write past the ring end
+    cannot roll back (the wrap clobbers in-window history), so it must
+    ride the verify step with one token — parity holds right up to a
+    completely full cache."""
+    cfg, params = served
+    reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32),
+                    max_new_tokens=11, seed=0)]      # 5 + 11 = 16 = clen
+    base = engine.DecodeEngine(params, cfg, _ecfg(max_batch=1,
+                                                  cache_len=16))
+    spec = engine.DecodeEngine(params, cfg, _ecfg(max_batch=1,
+                                                  cache_len=16,
+                                                  spec_tokens=3))
+    want, got = _tokens_of(base, reqs), _tokens_of(spec, reqs)
+    np.testing.assert_array_equal(want[0], got[0])
+    st = spec.spec_stats()
+    assert st["rounds"] > 0          # early rounds drafted ...
+    # ... but the tail rounds (base_fed + 4 > 16) were guarded: fewer
+    # drafted tokens than an unguarded run would produce.
+    assert st["drafted"] < 11 * 3
+
+
+def test_spec_temperature_reproducible_and_live(served):
+    """temp > 0 speculation: distribution-correct rejection sampling on
+    the host rng — reproducible across engine resets, and actually
+    sampling (different seeds diverge). Bitwise equality with the
+    spec-off device sampler is explicitly NOT the contract (§14)."""
+    cfg, params = served
+    eng = engine.DecodeEngine(params, cfg, _ecfg(spec_tokens=2))
+
+    def run(seed_offset=0):
+        eng.reset()
+        return _tokens_of(eng, _mixed_requests(
+            np.random.default_rng(2), lens=(3, 6), news=(8, 6),
+            temperature=0.8))
+
+    a, b = run(), run()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    eng.reset()
+    other = _tokens_of(eng, [
+        dataclasses.replace(r, seed=100 + i) for i, r in enumerate(
+            _mixed_requests(np.random.default_rng(2), lens=(3, 6),
+                            news=(8, 6), temperature=0.8))])
+    assert any(not np.array_equal(a[k], other[k]) for k in a)
+
+
+def test_ring_rewind_stale_future_entries_are_masked(served):
+    """The §14 ring-rollback argument, pinned at the model level: after
+    entries land at positions [0, 6), re-feeding from position 3 (the
+    rollback) must produce logits identical to a cache that never saw
+    positions 3..5 — the stale entries carry future pos stamps the
+    causal mask excludes."""
+    cfg, params = served
+    toks = np.asarray([[7], [11], [13], [17], [19], [23]], np.int32)
+    dirty = lm.init_cache(cfg, 1, 16, jnp.float32)
+    for t in range(6):
+        _, dirty = lm.decode_step(params, cfg, dirty, toks[t],
+                                  jnp.asarray([t], jnp.int32))
+    clean = lm.init_cache(cfg, 1, 16, jnp.float32)
+    for t in range(3):
+        _, clean = lm.decode_step(params, cfg, clean, toks[t],
+                                  jnp.asarray([t], jnp.int32))
+    # rollback to n_fed=3, then feed a DIFFERENT continuation
+    new_tok = jnp.asarray([29], jnp.int32)
+    pos3 = jnp.asarray([3], jnp.int32)
+    lg_dirty, _ = lm.decode_step(params, cfg, dirty, new_tok, pos3)
+    lg_clean, _ = lm.decode_step(params, cfg, clean, new_tok, pos3)
+    np.testing.assert_array_equal(np.asarray(lg_dirty),
+                                  np.asarray(lg_clean))
+
+
+# ============================================ request cancellation ========
+def test_cancel_queued_request(served):
+    cfg, params = served
+    eng = engine.DecodeEngine(params, cfg, _ecfg(max_batch=1))
+    rid0 = eng.submit(Request(prompt=np.asarray([1, 2, 3], np.int32),
+                              max_new_tokens=4))
+    rid1 = eng.submit(Request(prompt=np.asarray([4, 5], np.int32),
+                              max_new_tokens=4))
+    eng.step()                               # admits rid0 only
+    comp = eng.cancel(rid1)
+    assert comp is not None and comp.finish_reason == "evicted"
+    assert comp.new_tokens.size == 0 and comp.steps == 0
+    assert eng.cancel(99999) is None         # unknown id
+    done = list(eng.run())
+    assert [c.request_id for c in done] == [rid0]
+    assert done[0].finish_reason == "length"
+
+
+@pytest.mark.parametrize("steps_before_cancel", [1, 4])
+def test_cancel_active_paged_releases_pages(served, steps_before_cancel):
+    """Satellite regression: cancelling an ACTIVE request (mid-prefill at
+    1 step, mid-decode at 4) must route its pages through
+    ``PagePool.release`` — ``Scheduler.evict`` alone leaked them — with
+    the allocator invariants intact and follow-up traffic ring-parity."""
+    cfg, params = served
+    paged_kw = dict(kv_bits=4, kv_layout="paged", page_size=4)
+    eng = engine.DecodeEngine(params, cfg, _ecfg(max_batch=2, **paged_kw))
+    victim = Request(prompt=np.arange(1, 11, dtype=np.int32),
+                     max_new_tokens=8)
+    rid = eng.submit(victim)
+    for _ in range(steps_before_cancel):
+        eng.step()
+    st = eng.sched.slots[0]
+    mid_prefill = st.n_fed < len(victim.prompt)
+    assert mid_prefill == (steps_before_cancel == 1)
+    comp = eng.cancel(rid)
+    assert comp is not None and comp.finish_reason == "evicted"
+    eng.pool.check()
+    assert (eng.pool.table[0] == -1).all()   # every page reference dropped
+    assert eng.cancel(rid) is None           # idempotent: already finished
+    # Follow-up requests admit into the freed slot and stay ring-parity.
+    reqs = _mixed_requests(np.random.default_rng(3), lens=(3, 7),
+                           news=(5, 4))
+    ring = engine.DecodeEngine(params, cfg, _ecfg(max_batch=2, kv_bits=4))
+    want, got = _tokens_of(ring, reqs), _tokens_of(eng, reqs)
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+    eng.pool.check()
+
+
+def test_cancel_active_ring_and_spec_engine(served):
+    """Cancellation on the ring layout (no pool) frees the slot; the
+    speculative engine cancels mid-flight too, and the survivors' tokens
+    are untouched."""
+    cfg, params = served
+    eng = engine.DecodeEngine(params, cfg, _ecfg(max_batch=2,
+                                                 spec_tokens=2))
+    keep = Request(prompt=np.asarray([9, 8, 7], np.int32),
+                   max_new_tokens=6, seed=1)
+    solo = engine.DecodeEngine(params, cfg, _ecfg(max_batch=2,
+                                                  spec_tokens=2))
+    want = _tokens_of(solo, [keep])[0]
+    rid_victim = eng.submit(Request(
+        prompt=np.asarray([1, 2], np.int32), max_new_tokens=8, seed=0))
+    rid_keep = eng.submit(dataclasses.replace(keep))
+    for _ in range(2):
+        eng.step()
+    comp = eng.cancel(rid_victim)
+    assert comp is not None and comp.finish_reason == "evicted"
+    done = {c.request_id: c for c in eng.run()}
+    assert set(done) == {rid_keep}
+    np.testing.assert_array_equal(done[rid_keep].tokens, want)
+
+
+def test_spec_config_validation(served):
+    cfg, params = served
+    with pytest.raises(ValueError, match="cache_len"):
+        engine.DecodeEngine(params, cfg, _ecfg(cache_len=4, spec_tokens=8))
+    with pytest.raises(AssertionError):
+        QuantConfig(mode="serve", draft_slice_bits=3)

@@ -258,6 +258,72 @@ def test_scheduler_evict():
     assert slot in s.free_slots and s.num_active == 0
 
 
+def test_evict_steps_matches_advance_steps_accounting():
+    """Satellite fix: ``evict`` runs BETWEEN engine steps, when
+    ``step_count`` already covers every step the slot ran — the
+    unconditional +1 (correct only for finishes inside ``advance``,
+    where the current step is not yet counted) inflated evicted
+    completions' ``steps`` by one."""
+    def run(n_steps, finish_via_advance):
+        s = Scheduler(max_batch=1)
+        s.submit(Request(prompt=np.asarray([1, 2]),
+                         max_new_tokens=n_steps - 1
+                         if finish_via_advance else 10))
+        (slot, _), = s.admit()
+        for i in range(n_steps):
+            last = i == n_steps - 1
+            if finish_via_advance and last:
+                # the terminal sample finishes the request inside advance
+                done = s.advance({slot: 1}, {slot: 7})
+                return done[0]
+            s.advance({slot: 1}, {slot: 7})
+        return s.evict(slot)
+
+    # A request occupying a slot for 3 steps reports steps=3 whether it
+    # finished inside step 3's advance or was evicted right after it.
+    assert run(3, finish_via_advance=True).steps == 3
+    assert run(3, finish_via_advance=False).steps == 3
+
+
+def test_scheduler_cancel_queued_only():
+    """``cancel`` removes a still-queued request (zero-generation
+    "evicted" completion, steps=0); admitted / unknown ids return None —
+    an admitted request must go through the engine, which releases its
+    cache resources before evicting."""
+    s = Scheduler(max_batch=1)
+    r0 = s.submit(Request(prompt=np.asarray([1]), max_new_tokens=2))
+    r1 = s.submit(Request(prompt=np.asarray([2]), max_new_tokens=2))
+    (slot, _), = s.admit()                   # r0 takes the only slot
+    assert s.cancel(r0) is None              # admitted: not cancellable here
+    assert s.cancel(12345) is None           # unknown
+    c = s.cancel(r1)
+    assert c is not None and c.request_id == r1
+    assert c.finish_reason == "evicted" and c.new_tokens.size == 0
+    assert c.steps == 0 and s.pending == 0
+    assert slot in s.slots                   # r0 untouched
+
+
+def test_advance_commits_multi_token_lists():
+    """Speculative rounds commit an ordered token LIST per slot in one
+    advance; eos / max_new_tokens truncate the list at the terminal
+    token (DESIGN.md §14)."""
+    s = Scheduler(max_batch=1)
+    s.submit(Request(prompt=np.asarray([1]), max_new_tokens=6, eos_id=9))
+    (slot, _), = s.admit()
+    assert s.advance({slot: 1}, {slot: [5, 6]}) == []
+    assert s.slots[slot].generated == [5, 6]
+    done = s.advance({slot: 2}, {slot: [7, 9, 8]})   # eos mid-list
+    assert done[0].finish_reason == "eos"
+    assert done[0].new_tokens.tolist() == [5, 6, 7, 9]
+    # max_new_tokens truncates the same way
+    s2 = Scheduler(max_batch=1)
+    s2.submit(Request(prompt=np.asarray([1]), max_new_tokens=2))
+    (slot, _), = s2.admit()
+    done = s2.advance({slot: 1}, {slot: [3, 4, 5]})
+    assert done[0].finish_reason == "length"
+    assert done[0].new_tokens.tolist() == [3, 4]
+
+
 def test_reset_cache_slots_wipes_only_target_rows(served):
     cfg, params = served
     cache = lm.init_cache(cfg, 3, 16, np.float32)

@@ -1,0 +1,35 @@
+"""`repro.analysis` — the SONIQ-specific static analyzer (DESIGN.md §15).
+
+SONIQ's parity claim rests on the deployed path executing *exactly* the
+discrete arithmetic trained against: one silent fp promotion inside a
+packed segment GEMM, one unmasked ring scatter, or one kernel call that
+bypasses the ``Backend`` registry breaks that contract without failing any
+unit test — until it corrupts tokens under traffic. PRs 2–7 each
+hand-fixed another instance of the same few hazard classes; this package
+makes those classes *unwritable*:
+
+* :mod:`repro.analysis.lint` — a stdlib-``ast`` linter whose rules
+  (SQ001–SQ006) codify the bug classes from CHANGES.md, with inline
+  ``# soniq-lint: disable=SQxxx(reason)`` suppressions and a committed
+  baseline file for grandfathered violations.
+* :mod:`repro.analysis.jaxpr_checks` — trace-time audits: lower the
+  jitted ``DecodeEngine`` step family per registered backend and walk the
+  ClosedJaxpr (no narrowing/f64 dtype converts inside quantized
+  segment-GEMM subtrees, no host callbacks in serve steps), report
+  buffer-donation coverage, and assert each engine step function compiles
+  exactly once across a mixed-length traffic trace.
+* ``python -m repro.analysis`` — the CLI (human + JSON output) that CI's
+  static-analysis leg runs with ``--check``.
+"""
+from __future__ import annotations
+
+from .lint import (  # noqa: F401
+    LintResult, Rule, Suppression, Violation, all_rules, lint_file,
+    lint_paths, lint_source, load_baseline, match_baseline, rule,
+)
+
+__all__ = [
+    "LintResult", "Rule", "Suppression", "Violation", "all_rules",
+    "lint_file", "lint_paths", "lint_source", "load_baseline",
+    "match_baseline", "rule",
+]

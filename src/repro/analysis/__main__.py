@@ -1,0 +1,130 @@
+"""``python -m repro.analysis`` — the analyzer CLI (DESIGN.md §15).
+
+Modes::
+
+    python -m repro.analysis                  # lint src/ against baseline
+    python -m repro.analysis --check          # lint + jaxpr audits (CI leg)
+    python -m repro.analysis --json           # machine-readable report
+    python -m repro.analysis --list-rules     # rule table with rationales
+    python -m repro.analysis --write-baseline # grandfather current findings
+    python -m repro.analysis path.py other/   # lint specific paths
+
+Exit status: 0 clean, 1 findings, 2 bad invocation. ``--check`` is what
+CI's static-analysis leg runs per backend (``--backends`` defaults to the
+two-way CPU matrix).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import lint as lint_mod
+
+# src/repro/analysis/__main__.py -> repo root
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+_DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+_DEFAULT_BACKENDS = "xla_ref,pallas_interpret"
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="SONIQ-specific static analyzer: AST lint (SQ rules) "
+                    "+ jaxpr dtype/donation/recompile audits.")
+    p.add_argument("paths", nargs="*", type=Path,
+                   help="files/directories to lint (default: the repo's "
+                        "src/ tree)")
+    p.add_argument("--check", action="store_true",
+                   help="also run the trace-time jaxpr audits (what CI "
+                        "runs); exit 1 on any finding")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit one JSON report on stdout")
+    p.add_argument("--backends", default=_DEFAULT_BACKENDS,
+                   help="comma-separated backend names for the jaxpr "
+                        f"audits (default: {_DEFAULT_BACKENDS})")
+    p.add_argument("--baseline", type=Path, default=_DEFAULT_BASELINE,
+                   help="baseline file of grandfathered violations "
+                        "(default: the committed repro/analysis/"
+                        "baseline.json)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline (report everything)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline file with the currently "
+                        "standing lint violations and exit 0")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule table with one-line rationales")
+    p.add_argument("--skip-jaxpr", action="store_true",
+                   help="with --check: lint only (used by the lint-speed "
+                        "CI shard)")
+    p.add_argument("--no-train", action="store_true",
+                   help="with --check: skip the train-step jaxpr audit")
+    return p
+
+
+def _print_rules() -> None:
+    for r in lint_mod.all_rules():
+        print(f"{r.code}  {r.name:<24} {r.rationale}")
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        _print_rules()
+        return 0
+
+    paths = args.paths or [_REPO_ROOT / "src"]
+    for p in paths:
+        if not Path(p).exists():
+            print(f"error: no such path {p}", file=sys.stderr)
+            return 2
+
+    baseline_path = None if args.no_baseline else args.baseline
+    result = lint_mod.lint_paths(paths, baseline=baseline_path)
+
+    if args.write_baseline:
+        entries = lint_mod.baseline_entries(result.violations
+                                            + result.baselined)
+        args.baseline.write_text(json.dumps(entries, indent=1,
+                                            sort_keys=True) + "\n")
+        print(f"wrote {len(entries)} baseline entries to {args.baseline}")
+        return 0
+
+    audit_report, audit_issues = None, []
+    if args.check and not args.skip_jaxpr:
+        from . import jaxpr_checks
+        backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+        audit_report, audit_issues = jaxpr_checks.run_audits(
+            backends, train=not args.no_train)
+
+    findings = len(result.violations) + len(audit_issues)
+    if args.as_json:
+        out = {
+            "ok": findings == 0,
+            "violations": [v.to_json() for v in result.violations],
+            "suppressed": [s.to_json() for s in result.suppressed],
+            "baselined": [v.to_json() for v in result.baselined],
+            "audit_issues": [i.to_json() for i in audit_issues],
+        }
+        if audit_report is not None:
+            out["audit_report"] = audit_report
+        print(json.dumps(out, indent=1, default=str))
+        return 1 if findings else 0
+
+    for v in result.violations:
+        print(v.format())
+    for i in audit_issues:
+        print(i.format())
+    tail = (f"{len(result.violations)} violation(s), "
+            f"{len(result.suppressed)} suppressed, "
+            f"{len(result.baselined)} baselined")
+    if args.check and not args.skip_jaxpr:
+        tail += f", {len(audit_issues)} audit issue(s)"
+    status = "FAILED" if findings else "OK"
+    print(f"soniq-analysis {status}: {tail}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

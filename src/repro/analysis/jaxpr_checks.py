@@ -1,0 +1,335 @@
+"""Trace-time audits of the jitted serve/train hot paths (DESIGN.md §15).
+
+The AST lint (``repro.analysis.lint``) catches hazard classes you can see
+in source; these audits catch the ones you can only see after tracing.
+They build a tiny ``DecodeEngine`` per registered backend, drive a
+mixed-length traffic trace through it, and then:
+
+* **Recompile guard** — every jitted step function (the engine's
+  :class:`repro.serve.engine.JitEntry` table) must have compiled exactly
+  once across the whole trace. The engine's fixed-shape contract (padded
+  admission sets, fixed prefill chunk, fixed speculative width) is what
+  makes host-latency-bound decode viable; a shape leak that retraces per
+  occupancy pattern is a silent 100x serve-step regression.
+* **Segment-GEMM dtype contract** — walk each step's ClosedJaxpr
+  (recursively through pjit/scan/cond/custom-vjp/pallas sub-jaxprs) and,
+  inside the ``soniq_segment_gemm`` name scope the shared driver tags
+  (``repro.backend.base.SEGMENT_GEMM_SCOPE``), reject narrowing
+  float→float ``convert_element_type`` (an f16 round-trip inside the
+  packed GEMM is exactly the silent precision change that breaks
+  cross-backend token parity), any float64, and any ``dot_general`` that
+  does not accumulate in fp32. Integer→float converts are the dequant
+  itself and fp16/bf16→fp32 widenings are the documented accumulate
+  promotion — both exact, both allowed.
+* **No host callbacks** — ``pure_callback``/``io_callback``/
+  ``debug_callback`` inside a serve step is a per-step host round-trip
+  (and a nondeterminism hole); banned outright.
+* **Donation coverage** — every traced step function must donate its
+  cache-sized operand (declared ``donate_argnums`` non-empty AND the
+  lowered module actually carries input/output aliasing markers), so the
+  KV cache never double-buffers.
+
+All audits run on abstract values — no weights are trained, traffic is a
+few dozen tiny-model tokens per engine (interpret-mode Pallas included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backend.base import SEGMENT_GEMM_SCOPE
+
+_CALLBACK_PRIMITIVES = ("pure_callback", "io_callback", "debug_callback",
+                        "infeed", "outfeed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Issue:
+    check: str                   # "recompile" | "segment_dtype" | ...
+    where: str                   # "<backend>/<engine>/<fn>" context
+    message: str
+
+    def format(self) -> str:
+        return f"[{self.check}] {self.where}: {self.message}"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# Jaxpr walking
+# --------------------------------------------------------------------------
+
+def _sub_jaxprs(value) -> Iterator:
+    """Jaxpr objects nested in an eqn param value (ClosedJaxpr, Jaxpr,
+    or containers of them) — covers pjit, scan, while, cond branches,
+    custom-vjp and pallas_call without naming their param keys."""
+    if hasattr(value, "jaxpr"):              # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):             # Jaxpr
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def iter_eqns(jaxpr, in_segment: bool = False
+              ) -> Iterator[Tuple[object, bool]]:
+    """Yield ``(eqn, in_segment_gemm_scope)`` over the whole jaxpr tree.
+    Scope membership comes from the eqn's source-info name stack and is
+    inherited by sub-jaxprs (a pallas_call traced under the scope keeps
+    its kernel body in scope even though the inner eqns' stacks reset)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)   # accept ClosedJaxpr
+    for eqn in jaxpr.eqns:
+        scoped = in_segment or (
+            SEGMENT_GEMM_SCOPE in str(eqn.source_info.name_stack))
+        yield eqn, scoped
+        for p in eqn.params.values():
+            for sub in _sub_jaxprs(p):
+                yield from iter_eqns(sub, scoped)
+
+
+def _avals(vars_) -> Iterator:
+    for v in vars_:
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "dtype"):
+            yield aval
+
+
+def check_segment_gemm_dtypes(closed_jaxpr, where: str) -> List[Issue]:
+    """The quantized-GEMM dtype contract (module docstring)."""
+    issues: List[Issue] = []
+    f64 = jnp.dtype(jnp.float64)
+    f32 = jnp.dtype(jnp.float32)
+    for eqn, scoped in iter_eqns(closed_jaxpr):
+        for aval in _avals(eqn.outvars):
+            if aval.dtype == f64:
+                issues.append(Issue(
+                    "segment_dtype", where,
+                    f"float64 value produced by `{eqn.primitive.name}` — "
+                    f"an x64 promotion in the serve path breaks parity "
+                    f"with every fp32 backend"))
+                break
+        if not scoped:
+            continue
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            new = jnp.dtype(eqn.params["new_dtype"])
+            olds = [a.dtype for a in _avals(eqn.invars)]
+            old = olds[0] if olds else None
+            if old is not None and \
+                    jnp.issubdtype(old, jnp.floating) and \
+                    jnp.issubdtype(new, jnp.floating) and \
+                    new.itemsize < jnp.dtype(old).itemsize:
+                issues.append(Issue(
+                    "segment_dtype", where,
+                    f"narrowing float convert {old}->{new} inside the "
+                    f"segment-GEMM scope — silent precision loss in the "
+                    f"quantized arithmetic (the parity contract requires "
+                    f"the deployed GEMM to run the exact trained grid)"))
+        elif name == "dot_general":
+            pref = eqn.params.get("preferred_element_type")
+            outs = [a.dtype for a in _avals(eqn.outvars)]
+            out_ok = all(d == f32 for d in outs if
+                         jnp.issubdtype(d, jnp.floating))
+            if (pref is not None and jnp.dtype(pref) != f32) or not out_ok:
+                issues.append(Issue(
+                    "segment_dtype", where,
+                    f"segment GEMM dot_general does not accumulate in "
+                    f"fp32 (preferred_element_type={pref}, out={outs})"))
+    return issues
+
+
+def check_no_callbacks(closed_jaxpr, where: str) -> List[Issue]:
+    issues = []
+    for eqn, _ in iter_eqns(closed_jaxpr):
+        if any(eqn.primitive.name.startswith(c)
+               for c in _CALLBACK_PRIMITIVES):
+            issues.append(Issue(
+                "callback", where,
+                f"`{eqn.primitive.name}` inside a jitted serve/train "
+                f"step — a host round-trip (and nondeterminism hole) on "
+                f"the hot path"))
+    return issues
+
+
+# --------------------------------------------------------------------------
+# Donation coverage
+# --------------------------------------------------------------------------
+
+def donation_report(entry, where: str) -> Tuple[Dict, List[Issue]]:
+    """Lower one engine :class:`~repro.serve.engine.JitEntry` at its
+    recorded abstract shapes and cross-check the declared donation against
+    the module's input/output aliasing markers."""
+    issues: List[Issue] = []
+    n_args = len(jax.tree_util.tree_leaves(entry.abstract_args))
+    aliased = donors = -1
+    try:
+        txt = entry.jitted.lower(*entry.abstract_args).as_text()
+        aliased = txt.count("tf.aliasing_output")
+        donors = txt.count("jax.buffer_donor")
+    except Exception as e:                       # pragma: no cover
+        issues.append(Issue("donation", where, f"lowering failed: {e!r}"))
+    report = {"n_args": n_args, "donate_argnums": list(entry.donate_argnums),
+              "aliased_inputs": aliased, "buffer_donors": donors}
+    if not entry.donate_argnums:
+        issues.append(Issue(
+            "donation", where,
+            "jitted step declares no donated operands — cache-sized "
+            "buffers double-buffer every step (SQ004)"))
+    elif aliased == 0 and donors == 0:
+        issues.append(Issue(
+            "donation", where,
+            "donate_argnums declared but the lowered module carries no "
+            "aliasing/donor markers — donation silently dropped "
+            "(dtype/shape mismatch between the donated input and every "
+            "output?)"))
+    return report, issues
+
+
+# --------------------------------------------------------------------------
+# Engine traffic audit
+# --------------------------------------------------------------------------
+
+def _tiny_arch(**kw):
+    from repro.configs.base import ArchConfig
+    from repro.core.qtypes import QuantConfig
+    kw.setdefault("quant", QuantConfig(mode="qat"))
+    return ArchConfig(
+        name="analysis-tiny", family="dense", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=32,
+        dtype="float32", param_dtype="float32", q_block=32, **kw)
+
+
+def _mixed_requests(seed: int = 0):
+    """Mixed prompt lengths, generation lengths and arrival order: over a
+    max_batch-3 engine this varies batch occupancy, chunk widths and slot
+    reuse — the traffic shapes that historically triggered retraces."""
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    lens = (3, 7, 5, 2, 9, 4)
+    news = (4, 8, 3, 6, 5, 2)
+    return [Request(prompt=rng.integers(1, 100, (l,)), max_new_tokens=n,
+                    seed=i)
+            for i, (l, n) in enumerate(zip(lens, news))]
+
+
+# Step functions whose jaxpr runs packed segment GEMMs (serve forwards).
+_GEMM_ENTRIES = ("step", "decode", "prefill", "draft", "verify")
+
+
+def audit_decode_engine(backend: str, *, kv_layout: str = "ring",
+                        kv_bits: Optional[int] = None, spec_tokens: int = 0,
+                        seed: int = 0) -> Tuple[Dict, List[Issue]]:
+    """Build a tiny packed-checkpoint ``DecodeEngine`` on ``backend``,
+    serve a mixed traffic trace, then run every audit over its jit table.
+    Returns (report, issues)."""
+    from repro.models import lm
+    from repro.serve import engine as engine_lib
+
+    where_root = f"{backend}/DecodeEngine[{kv_layout}" \
+                 f"{',q4' if kv_bits else ''}" \
+                 f"{f',spec{spec_tokens}' if spec_tokens else ''}]"
+    cfg = _tiny_arch()
+    params = jax.device_get(lm.init_params(jax.random.PRNGKey(seed), cfg))
+    ecfg = engine_lib.EngineConfig(
+        max_batch=3, cache_len=64, prefill_chunk=4, backend=backend,
+        kv_bits=kv_bits, kv_layout=kv_layout, page_size=8,
+        spec_tokens=spec_tokens)
+    eng = engine_lib.DecodeEngine(params, cfg, ecfg)
+    completions = list(eng.serve(_mixed_requests(seed)))
+    issues: List[Issue] = []
+    if len(completions) != len(_mixed_requests(seed)):
+        issues.append(Issue("traffic", where_root,
+                            f"traffic trace lost completions "
+                            f"({len(completions)})"))
+
+    # Snapshot trace counts BEFORE any lowering below re-traces.
+    counts = {n: e.trace_count for n, e in eng.jit_table.items()}
+    report: Dict = {"backend": backend, "kv_layout": kv_layout,
+                    "kv_bits": kv_bits, "spec_tokens": spec_tokens,
+                    "entries": {}}
+    must_trace = {"verify"} if spec_tokens else {"decode", "prefill"}
+    traced = {n for n, c in counts.items() if c}
+    for missing in sorted(must_trace - traced):
+        issues.append(Issue(
+            "recompile", f"{where_root}/{missing}",
+            "step function never compiled — the traffic trace no longer "
+            "exercises it, so the audits above it prove nothing"))
+    for name, entry in eng.jit_table.items():
+        c = counts[name]
+        if c == 0:
+            continue
+        where = f"{where_root}/{name}"
+        if c != 1:
+            issues.append(Issue(
+                "recompile", where,
+                f"compiled {c}x across one fixed-shape traffic trace — "
+                f"a shape leak retraces the serve step under real "
+                f"traffic (every admission pattern would compile anew)"))
+        jaxpr = jax.make_jaxpr(entry.fn)(*entry.abstract_args)
+        issues.extend(check_no_callbacks(jaxpr, where))
+        if name in _GEMM_ENTRIES:
+            issues.extend(check_segment_gemm_dtypes(jaxpr, where))
+            if not any(s for _, s in iter_eqns(jaxpr)):
+                issues.append(Issue(
+                    "segment_dtype", where,
+                    "no eqn carries the segment-GEMM scope — the driver "
+                    "tag (backend.base.SEGMENT_GEMM_SCOPE) went missing, "
+                    "so the dtype audit is vacuous"))
+        dreport, dissues = donation_report(entry, where)
+        issues.extend(dissues)
+        report["entries"][name] = {"trace_count": c, **dreport}
+    return report, issues
+
+
+def audit_train_step(backend: str, seed: int = 0) -> Tuple[Dict, List[Issue]]:
+    """Trace one QAT train step on ``backend`` and hold its jaxpr to the
+    no-callback / no-f64 contract (the packed segment scope only exists in
+    serve mode; QAT forwards run fake-quant, not packed GEMMs)."""
+    import dataclasses as dc
+
+    from repro.train import state as state_lib
+
+    where = f"{backend}/train_step"
+    cfg = _tiny_arch()
+    cfg = dc.replace(cfg, quant=dc.replace(cfg.quant, backend=backend))
+    tcfg = state_lib.TrainConfig(num_microbatches=2, t1=2, t2=4, warmup=1)
+    state = state_lib.init_state(jax.random.PRNGKey(seed), cfg, tcfg)
+    batch = {"tokens": jnp.ones((4, 8), jnp.int32),
+             "labels": jnp.ones((4, 8), jnp.int32)}
+    rng = jax.random.PRNGKey(seed + 1)
+    jaxpr = jax.make_jaxpr(
+        lambda s, b, r: state_lib.train_step(s, b, cfg, tcfg, r))(
+            state, batch, rng)
+    issues = check_no_callbacks(jaxpr, where)
+    issues.extend(check_segment_gemm_dtypes(jaxpr, where))
+    return {"backend": backend, "eqns": len(jaxpr.jaxpr.eqns)}, issues
+
+
+def run_audits(backends: Iterable[str], *, train: bool = True
+               ) -> Tuple[Dict, List[Issue]]:
+    """The CI entry point: per backend, audit the ring-fp, ring-q4 and
+    paged-q4+speculative engine variants plus (optionally) the train
+    step. Variants were chosen so every Backend op (packed/fused GEMMs,
+    qkv ring + paged attention, the draft low-slice driver) appears in at
+    least one audited jaxpr."""
+    issues: List[Issue] = []
+    report: Dict = {"engines": [], "train": []}
+    for b in backends:
+        for kwargs in ({"kv_layout": "ring"},
+                       {"kv_layout": "ring", "kv_bits": 4},
+                       {"kv_layout": "paged", "kv_bits": 4,
+                        "spec_tokens": 2}):
+            r, i = audit_decode_engine(b, **kwargs)
+            report["engines"].append(r)
+            issues.extend(i)
+        if train:
+            r, i = audit_train_step(b)
+            report["train"].append(r)
+            issues.extend(i)
+    return report, issues

@@ -1,0 +1,710 @@
+"""Repo-specific AST lint rules for the SONIQ hazard classes (DESIGN.md §15).
+
+Each rule codifies a bug class that was found and fixed by hand in an
+earlier PR (see CHANGES.md) and must never be re-writable:
+
+    SQ001  cache-write scatter (``.at[dynamic].set/add``) without
+           ``mode="drop"`` — the PR 5 masked-lane ring clobber: a pos<0
+           lane wrapped to a live slot and silently evicted it.
+    SQ002  dividing by a raw abs-max that is never clamped — the PR 4
+           zero-row activation-scale divide (all-zero padding rows made
+           NaN logits for the whole batch once they mixed in the matmul).
+    SQ003  importing ``repro.kernels`` outside ``repro/backend`` — a
+           registry bypass: the call would skip the shared driver that
+           owns activation scaling (the PR 3 whole-batch act-scale leak
+           lived exactly in such a wrapper) and break backend parity.
+    SQ004  hot-path ``jax.jit`` in ``repro/serve`` without buffer
+           donation — every undonated step doubles the KV-cache working
+           set (two live copies of cache-sized buffers per step).
+    SQ005  host synchronization inside an engine step loop — each
+           ``.item()`` / ``np.asarray`` / ``device_get`` is a device
+           round-trip on the decode critical path; the engine budgets
+           exactly one per step (the sampled-token transfer).
+    SQ006  wall-clock / global-RNG nondeterminism in trace scope — a
+           ``time.time()`` or unseeded ``np.random``/stdlib-``random``
+           draw baked into a jitted function changes numerics between
+           traces, which no parity pin can survive.
+
+Suppressions are inline and must carry a reason::
+
+    x = cache.at[idx].set(v)  # soniq-lint: disable=SQ001(host-validated ids)
+
+A suppression comment may sit on the flagged line or alone on the line
+directly above it. Multiple codes: ``disable=SQ001(why),SQ005(why)``.
+A ``disable=`` without a parenthesized reason does not suppress anything —
+it is reported as a malformed suppression (SQ000).
+
+Grandfathered violations live in the committed baseline file
+(``src/repro/analysis/baseline.json``): entries match on (relative path,
+code, stripped source line), so unrelated edits do not invalidate them
+while any change to the flagged line itself forces a re-decision.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import tokenize
+from io import StringIO
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# Data model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str                    # repo-relative posix path ("" for snippets)
+    line: int
+    col: int
+    code: str                    # "SQ001" ... "SQ006" / "SQ000"
+    message: str
+    source_line: str = ""        # stripped text of the flagged line
+
+    def format(self) -> str:
+        return f"{self.path or '<source>'}:{self.line}:{self.col}: " \
+               f"{self.code} {self.message}"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    path: str
+    line: int                    # line the suppression applies to
+    code: str
+    reason: str
+    source_line: str = ""
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintResult:
+    """Violations that stand, suppressions that fired (with their recorded
+    reasons), and violations matched away by the baseline file."""
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    suppressed: List[Suppression] = dataclasses.field(default_factory=list)
+    baselined: List[Violation] = dataclasses.field(default_factory=list)
+
+    def extend(self, other: "LintResult") -> None:
+        self.violations.extend(other.violations)
+        self.suppressed.extend(other.suppressed)
+        self.baselined.extend(other.baselined)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    rationale: str               # one line: the originating bug class
+    make_visitor: Callable[["_FileContext"], ast.NodeVisitor]
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def rule(code: str, name: str, rationale: str):
+    """Register a rule: decorates an ``ast.NodeVisitor`` subclass whose
+    ``__init__`` takes the :class:`_FileContext`. This is also the
+    extension point for new rules (DESIGN.md §15)."""
+    def deco(cls):
+        assert code not in _RULES, f"duplicate rule {code}"
+        _RULES[code] = Rule(code, name, rationale, cls)
+        return cls
+    return deco
+
+
+def all_rules() -> Tuple[Rule, ...]:
+    return tuple(_RULES[c] for c in sorted(_RULES))
+
+
+class _FileContext:
+    """Per-file state shared with the rule visitors."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path             # repo-relative posix ("" for snippets)
+        self.source = source
+        self.lines = source.splitlines()
+        self.violations: List[Violation] = []
+
+    # Path predicates the rules scope themselves with. A snippet with no
+    # path ("") is treated as in-scope for every rule so rule fixtures and
+    # ad-hoc `--stdin` linting exercise all of them.
+    def in_pkg(self, *parts: str) -> bool:
+        if not self.path:
+            return True
+        p = self.path
+        return any(f"repro/{part}/" in p or p.endswith(f"repro/{part}.py")
+                   for part in parts)
+
+    def add(self, node: ast.AST, code: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        src = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+        self.violations.append(
+            Violation(self.path, line, col, code, message, src))
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str:
+    """'jnp.max' for Attribute/Name chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _call_name(node: ast.Call) -> str:
+    return _dotted(node.func)
+
+
+def _is_static_index(node: ast.AST) -> bool:
+    """True for index elements that cannot scatter out of bounds at run
+    time: literals, constant slices, Ellipsis, None — anything whose value
+    is fixed at trace time."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand,
+                                                    ast.Constant):
+        return True
+    if isinstance(node, ast.Slice):
+        return all(e is None or _is_static_index(e)
+                   for e in (node.lower, node.upper, node.step))
+    return False
+
+
+def _index_elements(sub: ast.Subscript) -> List[ast.AST]:
+    idx = sub.slice
+    if isinstance(idx, ast.Tuple):
+        return list(idx.elts)
+    return [idx]
+
+
+# --------------------------------------------------------------------------
+# SQ001 — cache-write scatter without mode="drop"
+# --------------------------------------------------------------------------
+
+_AT_UPDATE_METHODS = {"set", "add", "mul", "min", "max", "apply"}
+
+
+@rule("SQ001", "unmasked-scatter-write",
+      "PR 5 masked-lane ring clobber: a pos<0 lane wrapped to slot "
+      "cache_len-1 and silently evicted a live request's KV entry")
+class _ScatterRule(ast.NodeVisitor):
+    """Flag ``<buf>.at[<dynamic index>].set/add/...(...)`` calls with no
+    ``mode=`` keyword. A dynamically indexed scatter in jax clamps
+    out-of-bounds writes *to the last element* by default — the exact
+    mechanism of the ring clobber. In-bounds-by-construction sites
+    suppress inline with the reason; cache writes take ``mode="drop"``."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+
+    def visit_Call(self, node: ast.Call):
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr in _AT_UPDATE_METHODS
+                and isinstance(f.value, ast.Subscript)
+                and isinstance(f.value.value, ast.Attribute)
+                and f.value.value.attr == "at"):
+            has_mode = any(kw.arg == "mode" for kw in node.keywords)
+            dynamic = [e for e in _index_elements(f.value)
+                       if not _is_static_index(e)]
+            if dynamic and not has_mode:
+                self.ctx.add(
+                    node, "SQ001",
+                    f".at[...].{f.attr} with a dynamic index and no "
+                    f"mode= — an out-of-bounds lane clamps onto a live "
+                    f"entry; pass mode=\"drop\" (cache writes) or "
+                    f"suppress with the in-bounds argument")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# SQ002 — scale divide not clamped
+# --------------------------------------------------------------------------
+
+_CLAMP_MARKERS = re.compile(
+    r"\b(maximum|clip|clamp|eps|EPS|where|abs_max_scale|"
+    r"per_group_weight_scale)\b")
+_ABS_CALLS = {"abs", "jnp.abs", "np.abs", "jax.numpy.abs"}
+_MAX_CALLS = {"max", "amax", "jnp.max", "np.max", "jnp.amax", "np.amax",
+              "jax.numpy.max", "jax.numpy.amax"}
+
+
+def _is_raw_absmax(node: ast.AST) -> bool:
+    """True when ``node`` computes an abs-max with no clamp anywhere in the
+    expression: ``jnp.max(jnp.abs(x))``, ``jnp.abs(x).max()`` and friends.
+    The textual clamp check is deliberately permissive — any ``maximum`` /
+    ``clip`` / ``eps`` in the same expression counts as clamped; the rule
+    exists to catch the bare pattern, not to prove numerical safety."""
+    text = ast.unparse(node)
+    if _CLAMP_MARKERS.search(text):
+        return False
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        name = _call_name(sub)
+        if name in _MAX_CALLS or (isinstance(sub.func, ast.Attribute)
+                                  and sub.func.attr in ("max", "amax")):
+            if re.search(r"\babs\s*\(", ast.unparse(sub)):
+                return True
+    return False
+
+
+@rule("SQ002", "unclamped-scale-divide",
+      "PR 4 zero-row activation-scale divide: an all-zero padding row's "
+      "abs-max of 0 became a divisor — NaN/Inf logits for every row once "
+      "mixed in the matmul; clamp via core.quant.ACT_SCALE_EPS")
+class _ScaleDivideRule(ast.NodeVisitor):
+    """Intraprocedural: record names assigned a raw (unclamped) abs-max
+    expression, flag divisions by them — or by such an expression inline.
+    Also flags explicitly disabling the clamp (``eps=0``)."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+        self._raw: Dict[str, ast.AST] = {}
+
+    def _enter_scope(self, node):
+        saved = self._raw
+        self._raw = {}
+        self.generic_visit(node)
+        self._raw = saved
+
+    visit_FunctionDef = _enter_scope
+    visit_AsyncFunctionDef = _enter_scope
+    visit_Lambda = _enter_scope
+
+    def visit_Assign(self, node: ast.Assign):
+        if _is_raw_absmax(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self._raw[t.id] = node.value
+        else:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self._raw.pop(t.id, None)
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, ast.Div):
+            d = node.right
+            if (isinstance(d, ast.Name) and d.id in self._raw) \
+                    or _is_raw_absmax(d):
+                self.ctx.add(
+                    node, "SQ002",
+                    "dividing by a raw abs-max with no epsilon clamp — "
+                    "an all-zero row yields a 0 divisor; floor it with "
+                    "jnp.maximum(m, ACT_SCALE_EPS) (core.quant)")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        name = _call_name(node)
+        if name.endswith("abs_max_scale") or \
+                name.endswith("per_group_weight_scale"):
+            for kw in node.keywords:
+                if kw.arg == "eps" and isinstance(kw.value, ast.Constant) \
+                        and not kw.value.value:
+                    self.ctx.add(node, "SQ002",
+                                 f"{name}(eps=0) disables the zero-row "
+                                 f"clamp the serve path depends on")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# SQ003 — repro.kernels import outside the backend layer
+# --------------------------------------------------------------------------
+
+@rule("SQ003", "kernel-registry-bypass",
+      "PR 3 whole-batch act-scale leak lived in a direct kernel wrapper: "
+      "calls that bypass the Backend registry skip the shared driver that "
+      "owns activation scaling and segment order, breaking backend parity")
+class _KernelImportRule(ast.NodeVisitor):
+    """``repro.kernels`` may only be imported by ``repro/backend`` (the
+    implementations) and ``repro/kernels`` itself. Everything else goes
+    through ``repro.backend.registry.resolve(...)`` so dispatch, autotune
+    and the parity matrix see every call."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+        self.exempt = ctx.in_pkg("backend", "kernels")
+
+    def _flag(self, node, what: str):
+        if not self.exempt:
+            self.ctx.add(
+                node, "SQ003",
+                f"{what} outside repro/backend bypasses the kernel "
+                f"registry — dispatch via "
+                f"repro.backend.registry.resolve(...) instead")
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            if a.name == "repro.kernels" or \
+                    a.name.startswith("repro.kernels."):
+                self._flag(node, f"import {a.name}")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        if mod == "repro.kernels" or mod.startswith("repro.kernels."):
+            self._flag(node, f"from {mod} import ...")
+        elif mod == "repro" and any(a.name == "kernels"
+                                    for a in node.names):
+            self._flag(node, "from repro import kernels")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if _call_name(node) in ("importlib.import_module",
+                                "import_module") and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and \
+                    isinstance(arg.value, str) and \
+                    arg.value.startswith("repro.kernels"):
+                self._flag(node, f"import_module({arg.value!r})")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# SQ004 — serve-path jax.jit without buffer donation
+# --------------------------------------------------------------------------
+
+@rule("SQ004", "undonated-hot-jit",
+      "an undonated serve-step jit keeps TWO live copies of every "
+      "cache-sized buffer (old + new KV ring) per step — at production "
+      "cache sizes that halves the batch that fits")
+class _JitDonationRule(ast.NodeVisitor):
+    """In ``repro/serve``, every ``jax.jit(...)`` must pass
+    ``donate_argnums``/``donate_argnames`` (the engine step functions all
+    thread cache-sized state through). Jits elsewhere (train loops, launch
+    tooling, kernels' shape-specializing wrappers) are out of scope."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+        self.in_scope = ctx.in_pkg("serve")
+
+    def visit_Call(self, node: ast.Call):
+        if self.in_scope and _call_name(node) in ("jax.jit", "jit"):
+            if not any(kw.arg in ("donate_argnums", "donate_argnames")
+                       for kw in node.keywords):
+                self.ctx.add(
+                    node, "SQ004",
+                    "serve-path jax.jit without donate_argnums/"
+                    "donate_argnames — cache-sized buffers double-buffer "
+                    "every step; donate the cache operand (see "
+                    "DecodeEngine._jit) or suppress with why no operand "
+                    "is cache-sized")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# SQ005 — host sync inside engine step loops
+# --------------------------------------------------------------------------
+
+_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get", "device_get", "np.copy"}
+_SYNC_METHODS = {"item", "block_until_ready", "tolist"}
+_STEP_NAME = re.compile(r"(^|_)(step|run)($|_)|spec_step|after_advance")
+
+
+@rule("SQ005", "host-sync-in-step-loop",
+      "each host sync in the decode loop is a blocking device round-trip "
+      "on the critical path; the engine budgets exactly one per step "
+      "(the [B]-int sampled-token transfer, DESIGN.md §10)")
+class _HostSyncRule(ast.NodeVisitor):
+    """Inside ``repro/serve`` functions whose name marks them as engine
+    step loops (``step``/``run``/``_spec_step``/...), flag device→host
+    materializations: ``np.asarray``/``np.array``, ``.item()``,
+    ``.tolist()``, ``jax.device_get``, ``.block_until_ready()``,
+    ``float(<name or subscript>)``. The intentional per-step transfer
+    suppresses inline with its budget note."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+        self.in_scope = ctx.in_pkg("serve")
+        self._depth = 0              # inside a step-loop function?
+
+    def _visit_fn(self, node):
+        marked = bool(_STEP_NAME.search(node.name))
+        if marked:
+            self._depth += 1
+        self.generic_visit(node)
+        if marked:
+            self._depth -= 1
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call):
+        if self.in_scope and self._depth:
+            name = _call_name(node)
+            hit = None
+            if name in _SYNC_CALLS:
+                hit = name
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _SYNC_METHODS and not node.args:
+                hit = f".{node.func.attr}()"
+            elif name == "float" and node.args and isinstance(
+                    node.args[0], (ast.Name, ast.Subscript)):
+                hit = "float()"
+            if hit:
+                self.ctx.add(
+                    node, "SQ005",
+                    f"{hit} inside an engine step loop is a blocking "
+                    f"device->host sync — keep it on device, or suppress "
+                    f"with the per-step transfer budget it spends")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# SQ006 — wall-clock / global-RNG nondeterminism in trace scope
+# --------------------------------------------------------------------------
+
+_CLOCK_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.time_ns", "time.perf_counter_ns",
+                "datetime.now", "datetime.utcnow",
+                "datetime.datetime.now", "datetime.datetime.utcnow"}
+# Global-state numpy RNG entry points (legacy API). Generator methods on a
+# seeded np.random.default_rng(...) are deterministic and allowed.
+_GLOBAL_NP_RANDOM = re.compile(
+    r"^(np|numpy)\.random\.(?!default_rng$|SeedSequence$|Generator$)")
+_STDLIB_RANDOM = re.compile(
+    r"^random\.(random|randint|randrange|choice|choices|shuffle|sample|"
+    r"uniform|gauss|normalvariate|getrandbits|seed)$")
+
+
+def _is_jit_decorated(node) -> bool:
+    for d in node.decorator_list:
+        text = ast.unparse(d)
+        if re.search(r"\bjax\.jit\b|(^|\W)jit\b", text):
+            return True
+    return False
+
+
+@rule("SQ006", "traced-nondeterminism",
+      "a clock or unseeded global-RNG draw baked into a traced function "
+      "makes every retrace numerically different — no parity pin, "
+      "recompile guard, or cross-backend token identity can survive it")
+class _NondeterminismRule(ast.NodeVisitor):
+    """Inside trace-scope code — any function in ``repro/kernels``,
+    ``repro/models`` or ``repro/core``, plus ``@jax.jit``-decorated
+    functions anywhere — flag wall-clock reads, stdlib ``random`` and
+    legacy global-state ``np.random.*`` calls. Seeded
+    ``np.random.default_rng(seed)`` generators and ``jax.random`` keys are
+    the sanctioned sources."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+        self.always = ctx.in_pkg("kernels", "models", "core")
+        self._depth = 0
+
+    def _visit_fn(self, node):
+        marked = self.always or _is_jit_decorated(node)
+        if marked:
+            self._depth += 1
+        self.generic_visit(node)
+        if marked:
+            self._depth -= 1
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call):
+        if self._depth:
+            name = _call_name(node)
+            if name in _CLOCK_CALLS or _STDLIB_RANDOM.match(name) or \
+                    _GLOBAL_NP_RANDOM.match(name):
+                self.ctx.add(
+                    node, "SQ006",
+                    f"{name}(...) in trace scope is nondeterministic "
+                    f"across traces — derive randomness from a passed-in "
+                    f"jax.random key / seeded default_rng, and timestamps "
+                    f"from the host caller")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# Suppression parsing
+# --------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"soniq-lint:\s*disable=(.*)")
+_CODE_REASON_RE = re.compile(r"(SQ\d{3})\s*(?:\(([^)]*)\))?")
+
+
+def _parse_suppressions(source: str, path: str
+                        ) -> Tuple[Dict[int, Dict[str, str]],
+                                   List[Violation]]:
+    """line -> {code: reason} plus malformed-suppression violations.
+
+    A comment-only suppression line applies to the next non-comment line;
+    an end-of-line suppression applies to its own (logical) line."""
+    by_line: Dict[int, Dict[str, str]] = {}
+    malformed: List[Violation] = []
+    lines = source.splitlines()
+    pending: List[Tuple[int, str, str]] = []   # (comment line, code, reason)
+    try:
+        tokens = list(tokenize.generate_tokens(StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return by_line, malformed
+
+    def parse_comment(text: str, line: int) -> List[Tuple[str, str]]:
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            return []
+        found = _CODE_REASON_RE.findall(m.group(1))
+        out = []
+        if not found:
+            malformed.append(Violation(
+                path, line, 0, "SQ000",
+                "malformed soniq-lint suppression: expected "
+                "disable=SQxxx(reason)",
+                lines[line - 1].strip() if line <= len(lines) else ""))
+        for code, reason in found:
+            if not reason.strip():
+                malformed.append(Violation(
+                    path, line, 0, "SQ000",
+                    f"suppression of {code} without a reason — write "
+                    f"disable={code}(<why this site is safe>)",
+                    lines[line - 1].strip() if line <= len(lines) else ""))
+                continue
+            out.append((code, reason.strip()))
+        return out
+
+    for tok in tokens:
+        ttype, text, (srow, scol), _end, logical = tok
+        if ttype == tokenize.COMMENT:
+            pairs = parse_comment(text, srow)
+            own_line = logical[:scol].strip()
+            if own_line:                         # end-of-line comment
+                for code, reason in pairs:
+                    by_line.setdefault(srow, {})[code] = reason
+            else:                                # comment-only line
+                pending.extend((srow, c, r) for c, r in pairs)
+        elif ttype in (tokenize.NL, tokenize.NEWLINE, tokenize.INDENT,
+                       tokenize.DEDENT):
+            continue
+        elif ttype != tokenize.ENDMARKER and pending:
+            for _comment_row, code, reason in pending:
+                by_line.setdefault(srow, {})[code] = reason
+            pending = []
+    return by_line, malformed
+
+
+# --------------------------------------------------------------------------
+# Baseline
+# --------------------------------------------------------------------------
+
+def baseline_key(v: Violation) -> Tuple[str, str, str]:
+    return (v.path, v.code, v.source_line)
+
+
+def load_baseline(path: Optional[Path]) -> List[Dict]:
+    if path is None or not Path(path).exists():
+        return []
+    return json.loads(Path(path).read_text())
+
+
+def match_baseline(result: LintResult, baseline: Iterable[Dict]
+                   ) -> LintResult:
+    """Move violations matching a baseline entry into ``baselined``.
+    Matching is by (path, code, stripped line text): editing the flagged
+    line invalidates the grandfather, forcing a fix-or-suppress."""
+    keys = {(e["path"], e["code"], e["content"]) for e in baseline}
+    keep, grandfathered = [], []
+    for v in result.violations:
+        (grandfathered if baseline_key(v) in keys else keep).append(v)
+    return LintResult(keep, result.suppressed,
+                      result.baselined + grandfathered)
+
+
+def baseline_entries(violations: Iterable[Violation]) -> List[Dict]:
+    return [{"path": v.path, "code": v.code, "content": v.source_line}
+            for v in violations]
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "",
+                codes: Optional[Iterable[str]] = None) -> LintResult:
+    """Lint one source string. ``path`` (repo-relative posix) feeds the
+    rules' scope predicates; empty path means every rule applies."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return LintResult([Violation(path, e.lineno or 1, e.offset or 0,
+                                     "SQ000", f"syntax error: {e.msg}")])
+    ctx = _FileContext(path, source)
+    wanted = set(codes) if codes is not None else None
+    for r in all_rules():
+        if wanted is not None and r.code not in wanted:
+            continue
+        r.make_visitor(ctx).visit(tree)
+    supp_map, malformed = _parse_suppressions(source, path)
+    violations: List[Violation] = list(malformed)
+    suppressed: List[Suppression] = []
+    for v in sorted(ctx.violations, key=lambda v: (v.line, v.col, v.code)):
+        reason = supp_map.get(v.line, {}).get(v.code)
+        if reason is not None:
+            suppressed.append(Suppression(v.path, v.line, v.code, reason,
+                                          v.source_line))
+        else:
+            violations.append(v)
+    return LintResult(violations, suppressed)
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> LintResult:
+    rel = path.resolve()
+    if root is not None:
+        try:
+            rel = rel.relative_to(Path(root).resolve())
+        except ValueError:
+            pass
+    return lint_source(path.read_text(), rel.as_posix())
+
+
+def _default_root(paths: Iterable[Path]) -> Optional[Path]:
+    """Nearest ancestor holding this package's source tree — makes the
+    repo-relative paths in reports/baseline stable regardless of cwd."""
+    for p in paths:
+        cur = Path(p).resolve()
+        for anc in [cur] + list(cur.parents):
+            if (anc / "src" / "repro").is_dir():
+                return anc
+    return None
+
+
+def lint_paths(paths: Iterable[Path], root: Optional[Path] = None,
+               baseline: Optional[Path] = None) -> LintResult:
+    """Lint files/directories (``.py`` files, recursively) and apply the
+    baseline."""
+    paths = [Path(p) for p in paths]
+    if root is None:
+        root = _default_root(paths)
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    result = LintResult()
+    for f in files:
+        result.extend(lint_file(f, root))
+    result.violations.sort(key=lambda v: (v.path, v.line, v.col))
+    return match_baseline(result, load_baseline(baseline))

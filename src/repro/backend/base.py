@@ -55,6 +55,13 @@ OPS: Tuple[str, ...] = ("packed_matmul", "packed_segment_matmul",
                         "noise_inject", "fake_quant", "qkv_attn_decode",
                         "qkv_attn_decode_paged")
 
+# Name-stack tag the shared driver wraps every per-segment GEMM call in
+# (``jax.named_scope`` — free at run time, visible in each traced eqn's
+# source_info). ``repro.analysis.jaxpr_checks`` walks serve-step jaxprs
+# and holds everything under this scope to the quantized-GEMM dtype
+# contract: fp32 accumulation, no narrowing float converts, no f64.
+SEGMENT_GEMM_SCOPE = "soniq_segment_gemm"
+
 # Where each op's backend-specific implementation actually lives (defaults
 # to the op name itself): noise_inject's and fake_quant's public entry
 # points are the shared custom-VJP wrappers, so their capability hooks are
@@ -464,19 +471,24 @@ class Backend:
         for name, p, off, kp, goff, ng in segs:
             seg_scales = None if wscale is None else \
                 jax.lax.dynamic_slice_in_dim(wscale, goff, ng)
-            if self_scale:
-                y = y + self.fused_act_segment_matmul(
-                    x2[:, off:off + kp], serve_params[name], seg_scales,
-                    None, p=p, group_size=g, in_kernel_scale=True,
-                    **blocks)
-            elif fused:
-                y = y + self.fused_act_segment_matmul(
-                    x2[:, off:off + kp], serve_params[name], seg_scales,
-                    sx2, p=p, group_size=g, **blocks)
-            else:
-                y = y + self.packed_segment_matmul(
-                    x2[:, off:off + kp], serve_params[name], seg_scales,
-                    p=p, act_quant=False, group_size=g, **blocks)
+            # Tag the per-segment GEMM subtree for the static analyzer
+            # (repro.analysis.jaxpr_checks): everything traced inside this
+            # scope must keep the quantized arithmetic exact — fp32
+            # accumulate, no narrowing float converts, no f64.
+            with jax.named_scope(SEGMENT_GEMM_SCOPE):
+                if self_scale:
+                    y = y + self.fused_act_segment_matmul(
+                        x2[:, off:off + kp], serve_params[name], seg_scales,
+                        None, p=p, group_size=g, in_kernel_scale=True,
+                        **blocks)
+                elif fused:
+                    y = y + self.fused_act_segment_matmul(
+                        x2[:, off:off + kp], serve_params[name], seg_scales,
+                        sx2, p=p, group_size=g, **blocks)
+                else:
+                    y = y + self.packed_segment_matmul(
+                        x2[:, off:off + kp], serve_params[name], seg_scales,
+                        p=p, act_quant=False, group_size=g, **blocks)
         b = serve_params.get("b")
         if b is not None:
             y = y + b.astype(y.dtype)

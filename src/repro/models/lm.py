@@ -438,9 +438,9 @@ def reset_cache_slots(cache: Dict, slots):
             if "page_table" in tree:
                 out = dict(tree)
                 tbl = tree["page_table"]
-                out["page_table"] = (tbl.at[:, idx].set(-1)
+                out["page_table"] = (tbl.at[:, idx].set(-1)  # soniq-lint: disable=SQ001(reset slots are scheduler-validated)
                                      if tbl.ndim == 3 else
-                                     tbl.at[idx].set(-1))
+                                     tbl.at[idx].set(-1))  # soniq-lint: disable=SQ001(reset slots are scheduler-validated)
                 return out
             return {k: walk(v, k) for k, v in tree.items()}
         if isinstance(tree, list):
@@ -450,7 +450,8 @@ def reset_cache_slots(cache: Dict, slots):
         if tree is None:
             return None
         if name == "pos":
-            return tree.at[:, idx].set(-1)
-        return tree.at[:, idx].set(jnp.zeros((), tree.dtype))
+            return tree.at[:, idx].set(-1)  # soniq-lint: disable=SQ001(reset slots are scheduler-validated)
+        return tree.at[:, idx].set(  # soniq-lint: disable=SQ001(reset slots are scheduler-validated)
+            jnp.zeros((), tree.dtype))
 
     return walk(cache)

@@ -238,6 +238,6 @@ def mamba2_decode(params: Dict, x, cache: Dict, qcfg: QuantConfig, *,
                             None)
     new_cache = {"h": hs, "conv": window[:, 1:]}
     if stacked:
-        new_cache = {k: full_cache[k].at[layer_idx].set(v)
+        new_cache = {k: full_cache[k].at[layer_idx].set(v)  # soniq-lint: disable=SQ001(scan layer index < num_layers by construction)
                      for k, v in new_cache.items()}
     return out[:, None], new_cache

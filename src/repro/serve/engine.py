@@ -23,8 +23,9 @@ external callers; the implementations moved to ``repro.api.transforms``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
-from typing import Iterable, Iterator, List, Optional
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,11 +136,56 @@ class EngineConfig:
     spec_draft_bits: int = 2
 
 
+@dataclasses.dataclass
+class JitEntry:
+    """One jitted engine step function plus its audit metadata.
+
+    Engines create every hot-path jit through :meth:`_PackedEngine._jit`,
+    which records — *at trace time*, so steady-state steps pay nothing —
+    how many times the function compiled (``trace_count``; the
+    ``repro.analysis`` recompile guard pins this to 1 per shape family
+    over a mixed traffic trace) and the abstract shapes it was traced at
+    (``abstract_args``; the jaxpr/donation audits re-lower from these).
+    ``donate_argnums`` is the engine's declaration of which cache-sized
+    operands are donated (SQ004): the audit cross-checks it against the
+    ``tf.aliasing_output`` markers in the lowered module.
+    """
+    name: str
+    fn: Callable                       # the pre-jit python callable
+    jitted: Callable = None
+    donate_argnums: Tuple[int, ...] = ()
+    trace_count: int = 0
+    abstract_args: Optional[tuple] = None
+
+
 class _PackedEngine:
     """Shared packed-params + jitted-step plumbing of both engines."""
 
+    def _jit(self, name: str, fn: Callable, *,
+             donate_argnums: Tuple[int, ...] = ()) -> Callable:
+        """``jax.jit`` with the engine's audit bookkeeping (JitEntry) and
+        buffer donation. Every cache-threading step function donates its
+        cache operand: the old ring/pool buffers alias the new ones
+        in-place instead of double-buffering cache-sized arrays each step
+        (SQ004 — at production cache sizes the copy halves the batch that
+        fits)."""
+        entry = JitEntry(name, fn, donate_argnums=tuple(donate_argnums))
+
+        @functools.wraps(fn)
+        def traced(*args):
+            entry.trace_count += 1
+            entry.abstract_args = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                               jnp.result_type(x)), args)
+            return fn(*args)
+
+        entry.jitted = jax.jit(traced, donate_argnums=donate_argnums)
+        self.jit_table[name] = entry
+        return entry.jitted
+
     def __init__(self, params, arch_cfg, ecfg: EngineConfig,
                  *, already_serve: bool = False):
+        self.jit_table: Dict[str, JitEntry] = {}
         self.cfg = arch_cfg.with_quant_mode(Phase.SERVE)
         if ecfg.backend is not None:
             self.cfg = dataclasses.replace(
@@ -163,8 +209,10 @@ class _PackedEngine:
         self.ecfg = ecfg
         self.params = params if already_serve else lifecycle.convert_tree(
             params, self.cfg.quant, rebudget=True)
-        self._step = jax.jit(
-            lambda p, c, t, pos: lm.decode_step(p, self.cfg, c, t, pos))
+        self._step = self._jit(
+            "step", lambda p, c, t, pos: lm.decode_step(p, self.cfg, c, t,
+                                                        pos),
+            donate_argnums=(1,))
 
     def init_cache(self, batch: int):
         ecfg = self.ecfg
@@ -307,8 +355,10 @@ class DecodeEngine(_PackedEngine):
                 lg, c2 = lm.verify_step(p, self.cfg, c, t, pos)
                 return jnp.argmax(lg, -1).astype(jnp.int32), lg, c2
 
-            self._draft = jax.jit(draft_step)
-            self._verify = jax.jit(verify_step)
+            self._draft = self._jit("draft", draft_step,
+                                    donate_argnums=(1,))
+            self._verify = self._jit("verify", verify_step,
+                                     donate_argnums=(1,))
 
         # Sampling is fused into the jitted step: one dispatch and one
         # [B]-int transfer per engine step (the decode loop is host-latency
@@ -321,15 +371,21 @@ class DecodeEngine(_PackedEngine):
             logits, c2 = lm.prefill_step(p, self.cfg, c, t, pos, last)
             return _sample_tokens(logits, keys, temps, counts), c2
 
-        self._decode = jax.jit(decode_sample)
-        self._prefill = jax.jit(prefill_sample)
+        self._decode = self._jit("decode", decode_sample,
+                                 donate_argnums=(1,))
+        self._prefill = self._jit("prefill", prefill_sample,
+                                  donate_argnums=(1,))
         # One compiled reset for any admission set: idx is padded to
         # max_batch by repeating the first slot (re-wiping a row is
         # idempotent), so eager per-admission scatters never compile.
-        self._reset = jax.jit(lm.reset_cache_slots)
+        self._reset = self._jit("reset", lm.reset_cache_slots,
+                                donate_argnums=(0,))
         if ecfg.kv_layout == "paged":
-            self._apply_ops = jax.jit(kv_pool.apply_step_ops)
-            self._apply_poison = jax.jit(kv_pool.apply_poison)
+            self._apply_ops = self._jit("apply_ops", kv_pool.apply_step_ops,
+                                        donate_argnums=(0,))
+            self._apply_poison = self._jit("apply_poison",
+                                           kv_pool.apply_poison,
+                                           donate_argnums=(0,))
         self._init_host_state()
         self.cache = None
         self._keys = np.zeros((b, 2), np.uint32)
@@ -494,6 +550,7 @@ class DecodeEngine(_PackedEngine):
             out, self.cache = self._decode(self.params, self.cache,
                                            tokens, pos, active, self._keys,
                                            self._temps, counts)
+        # soniq-lint: disable=SQ005(the one budgeted [B]-int sync per step)
         sampled = np.asarray(out)
         slot_of = {st.request.request_id: s
                    for s, st in self.sched.slots.items()}
@@ -638,7 +695,9 @@ class DecodeEngine(_PackedEngine):
                     pos[s] = base_fed[s] + j
                 gr, lg, self.cache = self._draft(self.params, self.cache,
                                                  cur, pos, active)
+                # soniq-lint: disable=SQ005(host acceptance needs the draft)
                 gr = np.asarray(gr)
+                # soniq-lint: disable=SQ005(logits only cross when sampling)
                 lgh = np.asarray(lg, np.float32) if hot else None
                 for s in draft_slots:
                     if self.sched.slots[s].request.temperature > 0:
@@ -661,10 +720,12 @@ class DecodeEngine(_PackedEngine):
             pos[s, :len(feed)] = base_fed[s] + np.arange(len(feed))
         gr, lg, self.cache = self._verify(self.params, self.cache,
                                           tokens, pos)
+        # soniq-lint: disable=SQ005(per-round acceptance sync, DESIGN §14)
         gr = np.asarray(gr)                             # [B, C] argmaxes
         need_lg = bool(hot) or any(
             self.sched.slots[s].request.temperature > 0 for s in plan
             if s not in decode_slots)
+        # soniq-lint: disable=SQ005(logits only cross when a slot samples)
         lgh = np.asarray(lg, np.float32) if need_lg else None   # [B, C, V]
 
         # --- host-side acceptance + commit

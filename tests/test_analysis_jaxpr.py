@@ -1,0 +1,180 @@
+"""repro.analysis.jaxpr_checks: the trace-time audits hold on the real
+engine, and each check demonstrably catches its injected hazard
+(DESIGN.md §15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_checks as jc
+from repro.backend.base import SEGMENT_GEMM_SCOPE
+
+
+# ----------------------------------------------------- hazard injection ----
+
+def test_narrowing_convert_inside_scope_is_caught():
+    """An f16 round-trip inside the segment-GEMM scope is the silent
+    parity breaker the dtype audit exists for."""
+    def bad(x, w):
+        with jax.named_scope(SEGMENT_GEMM_SCOPE):
+            h = x.astype(jnp.float16)            # narrowing: flagged
+            return h.astype(jnp.float32) @ w
+    jaxpr = jax.make_jaxpr(bad)(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    issues = jc.check_segment_gemm_dtypes(jaxpr, "t")
+    assert any("narrowing float convert" in i.message for i in issues)
+
+
+def test_same_convert_outside_scope_is_allowed():
+    def fine(x, w):
+        h = x.astype(jnp.float16).astype(jnp.float32)   # not GEMM code
+        with jax.named_scope(SEGMENT_GEMM_SCOPE):
+            return x @ w
+    jaxpr = jax.make_jaxpr(fine)(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    assert jc.check_segment_gemm_dtypes(jaxpr, "t") == []
+
+
+def test_dequant_and_widening_converts_are_allowed():
+    """int->f32 dequant and bf16->f32 widening ARE the design — exact,
+    so not flagged."""
+    def gemm(codes, scale, x):
+        with jax.named_scope(SEGMENT_GEMM_SCOPE):
+            w = codes.astype(jnp.float32) * scale
+            xw = x.astype(jnp.float32)
+            return jax.lax.dot_general(
+                xw, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    jaxpr = jax.make_jaxpr(gemm)(
+        jnp.ones((8, 8), jnp.int8), jnp.float32(0.5),
+        jnp.ones((4, 8), jnp.bfloat16))
+    assert jc.check_segment_gemm_dtypes(jaxpr, "t") == []
+
+
+def test_low_precision_accumulation_is_caught():
+    def bad(x, w):
+        with jax.named_scope(SEGMENT_GEMM_SCOPE):
+            return jax.lax.dot_general(
+                x, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.bfloat16)
+    jaxpr = jax.make_jaxpr(bad)(jnp.ones((4, 8), jnp.bfloat16),
+                                jnp.ones((8, 8), jnp.bfloat16))
+    issues = jc.check_segment_gemm_dtypes(jaxpr, "t")
+    assert any("accumulate" in i.message for i in issues)
+
+
+def test_scope_propagates_into_sub_jaxprs():
+    """A scan/pjit traced under the scope keeps its body in scope — the
+    walker inherits membership into sub-jaxprs."""
+    def bad(x):
+        with jax.named_scope(SEGMENT_GEMM_SCOPE):
+            def body(c, _):
+                return c.astype(jnp.float16).astype(jnp.float32), ()
+            out, _ = jax.lax.scan(body, x, None, length=2)
+            return out
+    jaxpr = jax.make_jaxpr(bad)(jnp.ones((4,)))
+    issues = jc.check_segment_gemm_dtypes(jaxpr, "t")
+    assert any("narrowing" in i.message for i in issues)
+
+
+def test_callback_in_step_is_caught():
+    def bad(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v) * 2, jax.ShapeDtypeStruct((4,),
+                                                              jnp.float32),
+            x)
+    jaxpr = jax.make_jaxpr(bad)(jnp.ones((4,)))
+    issues = jc.check_no_callbacks(jaxpr, "t")
+    assert issues and "host round-trip" in issues[0].message
+    clean = jax.make_jaxpr(lambda x: x * 2)(jnp.ones((4,)))
+    assert jc.check_no_callbacks(clean, "t") == []
+
+
+# ----------------------------------------------------- donation report ----
+
+def _entry(fn, donate, args):
+    from repro.serve.engine import JitEntry
+    e = JitEntry("t", fn, donate_argnums=donate)
+    e.jitted = jax.jit(fn, donate_argnums=donate)
+    e.abstract_args = tuple(
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args)
+    return e
+
+
+def test_donation_report_counts_aliased_inputs():
+    cache = jnp.zeros((8, 16))
+    e = _entry(lambda p, c: (p, c + 1.0), (1,), (jnp.zeros((4,)), cache))
+    report, issues = jc.donation_report(e, "t")
+    assert issues == []
+    assert report["aliased_inputs"] >= 1
+
+
+def test_donation_report_flags_undonated_entry():
+    e = _entry(lambda c: c + 1.0, (), (jnp.zeros((8,)),))
+    _, issues = jc.donation_report(e, "t")
+    assert issues and "no donated operands" in issues[0].message
+
+
+def test_donation_report_flags_dropped_donation():
+    # Donated input aliases NO output (shape mismatch) -> markers absent.
+    e = _entry(lambda c: c.sum(), (0,), (jnp.zeros((8, 8)),))
+    _, issues = jc.donation_report(e, "t")
+    assert issues and "silently dropped" in issues[0].message
+
+
+# ------------------------------------------------- engine-level audits ----
+
+@pytest.mark.parametrize("kwargs", [
+    {"kv_layout": "ring"},
+    {"kv_layout": "paged", "kv_bits": 4, "spec_tokens": 2},
+], ids=["ring_fp", "paged_q4_spec"])
+def test_engine_audit_clean_on_reference_backend(kwargs):
+    """The tentpole gate: on the committed tree every audited engine
+    variant compiles each step once, donates its cache, runs a dtype- and
+    callback-clean jaxpr, and the segment scope is present (non-vacuous
+    dtype audit)."""
+    report, issues = jc.audit_decode_engine("xla_ref", **kwargs)
+    assert issues == [], "\n".join(i.format() for i in issues)
+    for name, entry in report["entries"].items():
+        assert entry["trace_count"] == 1, (name, entry)
+        assert entry["aliased_inputs"] >= 1, (name, entry)
+
+
+def test_train_step_audit_clean():
+    report, issues = jc.audit_train_step("xla_ref")
+    assert issues == [], "\n".join(i.format() for i in issues)
+    assert report["eqns"] > 0
+
+
+# ----------------------------------------- recompile regression (serve) ----
+
+def test_no_retrace_across_mixed_traffic_waves():
+    """Two waves of traffic with different prompt/generation lengths and
+    arrival patterns reuse the SAME compiled step functions — the
+    fixed-shape contract that keeps serve-step latency flat. A shape leak
+    (e.g. admitting a sub-chunk prefill at its natural width) turns every
+    new length mix into a recompile; this is the regression gate."""
+    from repro.models import lm
+    from repro.serve import engine as engine_lib
+    from repro.serve.scheduler import Request
+
+    cfg = jc._tiny_arch()
+    params = jax.device_get(lm.init_params(jax.random.PRNGKey(0), cfg))
+    eng = engine_lib.DecodeEngine(
+        params, cfg, engine_lib.EngineConfig(
+            max_batch=3, cache_len=64, prefill_chunk=4, backend="xla_ref"))
+    rng = np.random.default_rng(0)
+
+    def wave(lens, news, arrivals):
+        return [Request(prompt=rng.integers(1, 100, (l,)),
+                        max_new_tokens=n, seed=i, arrival_step=a)
+                for i, (l, n, a) in enumerate(zip(lens, news, arrivals))]
+
+    list(eng.serve(wave((3, 7, 5, 2, 9), (4, 8, 3, 6, 5), (0,) * 5)))
+    counts = {n: e.trace_count for n, e in eng.jit_table.items()
+              if e.trace_count}
+    assert counts and all(c == 1 for c in counts.values()), counts
+
+    # Second wave: new lengths, staggered arrivals -> zero new traces.
+    list(eng.serve(wave((1, 11, 6), (2, 5, 9), (0, 2, 4))))
+    after = {n: e.trace_count for n, e in eng.jit_table.items()
+             if e.trace_count}
+    assert after == counts, (counts, after)

@@ -1,0 +1,297 @@
+"""repro.analysis.lint: every SQ rule trips on the bug pattern that
+motivated it (CHANGES.md), stays quiet on the fixed form, and honors
+inline suppressions + the baseline workflow (DESIGN.md §15)."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src"
+
+
+def _lint(code, path="", codes=None):
+    return lint.lint_source(textwrap.dedent(code), path, codes=codes)
+
+
+def _codes(result):
+    return sorted(v.code for v in result.violations)
+
+
+# ------------------------------------------------------------- SQ001 ----
+# PR5's masked-lane bug: evicted lanes wrote ring position 0 through an
+# unmasked scatter, clobbering a live request's KV entry.
+
+def test_sq001_trips_on_dynamic_scatter_without_mode():
+    r = _lint("""
+        def write(cache, idx, kv):
+            return cache.at[:, idx].set(kv)
+    """)
+    assert _codes(r) == ["SQ001"]
+    assert "drop" in r.violations[0].message
+
+
+def test_sq001_trips_on_add_min_max():
+    r = _lint("""
+        def f(buf, i, x):
+            a = buf.at[i].add(x)
+            b = buf.at[i].max(x)
+            return a, b
+    """)
+    assert _codes(r) == ["SQ001", "SQ001"]
+
+
+def test_sq001_quiet_with_mode_drop():
+    r = _lint("""
+        def write(cache, idx, kv):
+            return cache.at[:, idx].set(kv, mode="drop")
+    """)
+    assert r.ok
+
+
+def test_sq001_quiet_on_static_index():
+    r = _lint("""
+        def f(buf, x):
+            a = buf.at[0].set(x)
+            b = buf.at[1:3].set(x)
+            c = buf.at[-1].set(x)
+            return a, b, c
+    """)
+    assert r.ok
+
+
+def test_sq001_suppressed_with_reason():
+    r = _lint("""
+        def reset(cache, idx):
+            return cache.at[idx].set(0)  # soniq-lint: disable=SQ001(host-validated ids)
+    """)
+    assert r.ok
+    assert [s.code for s in r.suppressed] == ["SQ001"]
+    assert r.suppressed[0].reason == "host-validated ids"
+
+
+def test_suppression_without_reason_is_malformed():
+    r = _lint("""
+        def reset(cache, idx):
+            return cache.at[idx].set(0)  # soniq-lint: disable=SQ001
+    """)
+    assert "SQ000" in _codes(r)
+
+
+def test_comment_line_suppression_covers_next_line():
+    r = _lint("""
+        def reset(cache, idx):
+            # soniq-lint: disable=SQ001(host-validated ids)
+            return cache.at[idx].set(0)
+    """)
+    assert r.ok and len(r.suppressed) == 1
+
+
+# ------------------------------------------------------------- SQ002 ----
+# PR4's zero-row divide: an all-pad row has abs-max 0, and x / 0 turns
+# the whole activation row NaN before the GEMM.
+
+def test_sq002_trips_on_unclamped_absmax_divide():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x):
+            s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+            return x / s
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_trips_on_inline_divide_and_method_form():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x):
+            return x / jnp.abs(x).max(axis=-1, keepdims=True)
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_quiet_when_clamped():
+    r = _lint("""
+        import jax.numpy as jnp
+        ACT_SCALE_EPS = 1e-6
+        def quantize(x):
+            s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                            ACT_SCALE_EPS)
+            return x / s
+    """)
+    assert r.ok
+
+
+def test_sq002_trips_on_zero_eps():
+    r = _lint("""
+        from repro.core.quant import abs_max_scale
+        def f(x):
+            return abs_max_scale(x, eps=0)
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+# ------------------------------------------------------------- SQ003 ----
+# Registry-bypass: calling repro.kernels.* directly skips backend
+# negotiation (and the interpret-mode gating CI relies on).
+
+def test_sq003_trips_outside_backend_pkg():
+    for src in ("import repro.kernels.flash",
+                "from repro.kernels import flash",
+                "from repro import kernels",
+                "import importlib\n"
+                "m = importlib.import_module('repro.kernels.flash')"):
+        r = lint.lint_source(src, "src/repro/serve/engine.py")
+        assert "SQ003" in _codes(r), src
+
+
+def test_sq003_allowed_inside_backend_and_kernels():
+    for path in ("src/repro/backend/pallas.py",
+                 "src/repro/kernels/flash.py"):
+        r = lint.lint_source("from repro.kernels import flash", path)
+        assert r.ok, path
+
+
+# ------------------------------------------------------------- SQ004 ----
+# Undonated cache-sized jit operands double-buffer the KV cache.
+
+def test_sq004_trips_on_undonated_serve_jit():
+    r = lint.lint_source(
+        "import jax\n"
+        "step = jax.jit(lambda p, c: c)\n",
+        "src/repro/serve/engine.py")
+    assert _codes(r) == ["SQ004"]
+
+
+def test_sq004_quiet_with_donation_or_outside_serve():
+    r = lint.lint_source(
+        "import jax\n"
+        "step = jax.jit(lambda p, c: c, donate_argnums=(1,))\n",
+        "src/repro/serve/engine.py")
+    assert r.ok
+    r = lint.lint_source("import jax\nf = jax.jit(lambda x: x)\n",
+                         "src/repro/train/state.py")
+    assert r.ok
+
+
+# ------------------------------------------------------------- SQ005 ----
+# Host syncs inside engine step loops serialize device and host; the
+# budget is one [B]-int transfer per step (DESIGN.md §10).
+
+def test_sq005_trips_in_step_functions():
+    r = lint.lint_source(textwrap.dedent("""
+        import numpy as np
+        class Engine:
+            def step(self, out):
+                toks = np.asarray(out)
+                flag = out.item()
+                host = float(out)
+                return toks, flag, host
+    """), "src/repro/serve/engine.py")
+    assert _codes(r) == ["SQ005", "SQ005", "SQ005"]
+
+
+def test_sq005_quiet_outside_step_and_outside_serve():
+    src = ("import numpy as np\n"
+           "def summarize(x):\n"
+           "    return np.asarray(x)\n")
+    assert lint.lint_source(src, "src/repro/serve/engine.py").ok
+    step = ("import numpy as np\n"
+            "def step(x):\n"
+            "    return np.asarray(x)\n")
+    assert lint.lint_source(step, "src/repro/eval/harness.py").ok
+
+
+# ------------------------------------------------------------- SQ006 ----
+# Wall-clock / global-RNG calls in traced code bake a trace-time value
+# into the compiled step (or silently differ across processes).
+
+def test_sq006_trips_in_jitted_and_kernel_code():
+    r = lint.lint_source(textwrap.dedent("""
+        import time, random
+        import numpy as np
+        import jax
+        @jax.jit
+        def f(x):
+            t = time.time()
+            r = random.random()
+            z = np.random.rand(3)
+            return x + t + r + z
+    """), "src/repro/train/state.py")
+    assert _codes(r) == ["SQ006", "SQ006", "SQ006"]
+
+
+def test_sq006_allows_seeded_generator():
+    r = lint.lint_source(
+        "import numpy as np\n"
+        "rng = np.random.default_rng(0)\n",
+        "src/repro/models/ssm.py")
+    assert r.ok
+
+
+# ----------------------------------------------------------- baseline ----
+
+def test_baseline_grandfathers_then_invalidates_on_edit(tmp_path):
+    src = ("def write(cache, idx, kv):\n"
+           "    return cache.at[idx].set(kv)\n")
+    f = tmp_path / "src" / "repro" / "hot.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(src)
+
+    first = lint.lint_paths([f], root=tmp_path)
+    assert len(first.violations) == 1
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(lint.baseline_entries(first.violations)))
+
+    again = lint.lint_paths([f], root=tmp_path, baseline=bl)
+    assert again.ok and len(again.baselined) == 1
+
+    # Editing the flagged line invalidates the grandfather.
+    f.write_text(src.replace(".set(kv)", ".set(kv * 2)"))
+    edited = lint.lint_paths([f], root=tmp_path, baseline=bl)
+    assert len(edited.violations) == 1 and not edited.baselined
+
+
+def test_syntax_error_reports_sq000():
+    r = lint.lint_source("def broken(:\n")
+    assert _codes(r) == ["SQ000"]
+
+
+# ---------------------------------------------------------- repo-wide ----
+
+def test_rule_registry_complete():
+    codes = [r.code for r in lint.all_rules()]
+    assert codes == ["SQ001", "SQ002", "SQ003", "SQ004", "SQ005", "SQ006"]
+    assert all(r.rationale for r in lint.all_rules())
+
+
+def test_repo_src_tree_is_clean():
+    """The committed tree lints clean against the committed baseline —
+    the same gate CI's static-analysis leg enforces."""
+    baseline = SRC_ROOT / "repro" / "analysis" / "baseline.json"
+    result = lint.lint_paths([SRC_ROOT], baseline=baseline)
+    assert result.ok, "\n".join(v.format() for v in result.violations)
+    # Every suppression in the tree carries a recorded reason.
+    assert all(s.reason for s in result.suppressed)
+
+
+def test_cli_json_output(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    f = tmp_path / "bad.py"
+    f.write_text("def f(c, i, x):\n    return c.at[i].set(x)\n")
+    rc = main([str(f), "--json", "--no-baseline"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1 and not out["ok"]
+    assert [v["code"] for v in out["violations"]] == ["SQ001"]
+
+
+def test_cli_write_baseline_roundtrip(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    f = tmp_path / "bad.py"
+    f.write_text("def f(c, i, x):\n    return c.at[i].set(x)\n")
+    bl = tmp_path / "baseline.json"
+    assert main([str(f), "--baseline", str(bl), "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main([str(f), "--baseline", str(bl)]) == 0

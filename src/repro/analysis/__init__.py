@@ -1,4 +1,4 @@
-"""`repro.analysis` — the SONIQ-specific static analyzer (DESIGN.md §15).
+"""`repro.analysis` — the SONIQ-specific static analyzer (DESIGN.md §15–16).
 
 SONIQ's parity claim rests on the deployed path executing *exactly* the
 discrete arithmetic trained against: one silent fp promotion inside a
@@ -9,27 +9,45 @@ hand-fixed another instance of the same few hazard classes; this package
 makes those classes *unwritable*:
 
 * :mod:`repro.analysis.lint` — a stdlib-``ast`` linter whose rules
-  (SQ001–SQ006) codify the bug classes from CHANGES.md, with inline
+  (SQ001–SQ007) codify the bug classes from CHANGES.md, with inline
   ``# soniq-lint: disable=SQxxx(reason)`` suppressions and a committed
   baseline file for grandfathered violations.
+* :mod:`repro.analysis.dataflow` — interprocedural scale dataflow
+  (SQ008): tags abs-max-produced values as scale-like and propagates
+  them across returns, call arguments, pytree packing and closures,
+  flagging any divide (or reciprocal-multiply) by a scale that no path
+  clamps — the cross-function gap the intraprocedural SQ002 cannot see.
 * :mod:`repro.analysis.jaxpr_checks` — trace-time audits: lower the
   jitted ``DecodeEngine`` step family per registered backend and walk the
   ClosedJaxpr (no narrowing/f64 dtype converts inside quantized
   segment-GEMM subtrees, no host callbacks in serve steps), report
   buffer-donation coverage, and assert each engine step function compiles
   exactly once across a mixed-length traffic trace.
-* ``python -m repro.analysis`` — the CLI (human + JSON output) that CI's
-  static-analysis leg runs with ``--check``.
+* :mod:`repro.analysis.kernel_audit` — Pallas kernel contract audit:
+  grid/BlockSpec divisibility and static in-bounds over every registered
+  arch x autotune block candidate, kernel-body dtype discipline (fp32
+  accumulation, no f64, no narrowing), and a 1:1 kernel↔Backend-op
+  mapping with parity oracles and no orphans.
+* :mod:`repro.analysis.model_check` — explicit-state BFS model checker
+  for the host-side ``PagePool``: every op interleaving on a small pool,
+  asserting the shared invariant set (refcounts, partition, no shared
+  writes, poison-cancel) and emitting a minimal violating trace.
+* ``python -m repro.analysis`` — the CLI (human, JSON and SARIF output)
+  that CI's static-analysis leg runs with ``--check``.
 """
 from __future__ import annotations
 
+from .dataflow import (  # noqa: F401
+    DataflowResult, analyze_paths, analyze_source, analyze_sources,
+)
 from .lint import (  # noqa: F401
     LintResult, Rule, Suppression, Violation, all_rules, lint_file,
     lint_paths, lint_source, load_baseline, match_baseline, rule,
 )
 
 __all__ = [
-    "LintResult", "Rule", "Suppression", "Violation", "all_rules",
+    "DataflowResult", "LintResult", "Rule", "Suppression", "Violation",
+    "all_rules", "analyze_paths", "analyze_source", "analyze_sources",
     "lint_file", "lint_paths", "lint_source", "load_baseline",
     "match_baseline", "rule",
 ]

@@ -1,17 +1,31 @@
-"""``python -m repro.analysis`` — the analyzer CLI (DESIGN.md §15).
+"""``python -m repro.analysis`` — the analyzer CLI (DESIGN.md §15–16).
 
 Modes::
 
-    python -m repro.analysis                  # lint src/ against baseline
-    python -m repro.analysis --check          # lint + jaxpr audits (CI leg)
+    python -m repro.analysis                  # lint + dataflow vs baseline
+    python -m repro.analysis --check          # + jaxpr audits, kernel
+                                              #   audit, PagePool model
+                                              #   check (the CI leg)
     python -m repro.analysis --json           # machine-readable report
+    python -m repro.analysis --sarif out.sarif  # SARIF 2.1.0 for upload
     python -m repro.analysis --list-rules     # rule table with rationales
     python -m repro.analysis --write-baseline # grandfather current findings
-    python -m repro.analysis path.py other/   # lint specific paths
+    python -m repro.analysis path.py other/   # analyze specific paths
+
+Engines and their skip flags (all run under ``--check``):
+
+* AST lint (SQ001–SQ007) — always on.
+* Interprocedural scale dataflow (SQ008) — ``--skip-dataflow``.
+* Trace-time jaxpr audits — ``--skip-jaxpr`` (``--no-train`` skips the
+  train-step audit; ``--backends`` picks the engine matrix).
+* Pallas kernel contract audit — ``--skip-kernel-audit``.
+* PagePool interleaving model check — ``--skip-model-check``
+  (``--mc-depth`` bounds the BFS; the default explores every
+  interleaving of a 2-slot, 3-page pool to depth 6 in ~1s).
 
 Exit status: 0 clean, 1 findings, 2 bad invocation. ``--check`` is what
-CI's static-analysis leg runs per backend (``--backends`` defaults to the
-two-way CPU matrix).
+CI's static-analysis leg runs (``--backends`` defaults to the two-way
+CPU matrix).
 """
 from __future__ import annotations
 
@@ -20,6 +34,7 @@ import json
 import sys
 from pathlib import Path
 
+from . import dataflow as dataflow_mod
 from . import lint as lint_mod
 
 # src/repro/analysis/__main__.py -> repo root
@@ -32,15 +47,20 @@ def _build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="SONIQ-specific static analyzer: AST lint (SQ rules) "
-                    "+ jaxpr dtype/donation/recompile audits.")
+                    "+ interprocedural scale dataflow + jaxpr audits + "
+                    "Pallas kernel contract audit + PagePool model check.")
     p.add_argument("paths", nargs="*", type=Path,
-                   help="files/directories to lint (default: the repo's "
-                        "src/ tree)")
+                   help="files/directories to analyze (default: the "
+                        "repo's src/ tree)")
     p.add_argument("--check", action="store_true",
-                   help="also run the trace-time jaxpr audits (what CI "
-                        "runs); exit 1 on any finding")
+                   help="also run the trace-time jaxpr audits, the kernel "
+                        "contract audit and the PagePool model check "
+                        "(what CI runs); exit 1 on any finding")
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="emit one JSON report on stdout")
+    p.add_argument("--sarif", type=Path, metavar="FILE",
+                   help="also write a SARIF 2.1.0 log of every finding "
+                        "to FILE (for code-scanning upload)")
     p.add_argument("--backends", default=_DEFAULT_BACKENDS,
                    help="comma-separated backend names for the jaxpr "
                         f"audits (default: {_DEFAULT_BACKENDS})")
@@ -56,8 +76,20 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--list-rules", action="store_true",
                    help="print the rule table with one-line rationales")
     p.add_argument("--skip-jaxpr", action="store_true",
-                   help="with --check: lint only (used by the lint-speed "
-                        "CI shard)")
+                   help="with --check: skip the trace-time jaxpr audits "
+                        "(used by the lint-speed CI shard)")
+    p.add_argument("--skip-dataflow", action="store_true",
+                   help="skip the interprocedural scale-dataflow pass "
+                        "(SQ008)")
+    p.add_argument("--skip-kernel-audit", action="store_true",
+                   help="with --check: skip the Pallas kernel contract "
+                        "audit")
+    p.add_argument("--skip-model-check", action="store_true",
+                   help="with --check: skip the PagePool interleaving "
+                        "model check")
+    p.add_argument("--mc-depth", type=int, default=6,
+                   help="model-check BFS depth bound (default: 6 — deep "
+                        "enough for every known violation class)")
     p.add_argument("--no-train", action="store_true",
                    help="with --check: skip the train-step jaxpr audit")
     return p
@@ -66,6 +98,9 @@ def _build_parser() -> argparse.ArgumentParser:
 def _print_rules() -> None:
     for r in lint_mod.all_rules():
         print(f"{r.code}  {r.name:<24} {r.rationale}")
+    print("SQ008  cross-function-scale-div   interprocedural dataflow: a "
+          "raw abs-max scale reaches a divide in another function with "
+          "no epsilon clamp on any path")
 
 
 def main(argv=None) -> int:
@@ -91,6 +126,10 @@ def main(argv=None) -> int:
         print(f"wrote {len(entries)} baseline entries to {args.baseline}")
         return 0
 
+    df_result = None
+    if not args.skip_dataflow:
+        df_result = dataflow_mod.analyze_paths(paths)
+
     audit_report, audit_issues = None, []
     if args.check and not args.skip_jaxpr:
         from . import jaxpr_checks
@@ -98,7 +137,30 @@ def main(argv=None) -> int:
         audit_report, audit_issues = jaxpr_checks.run_audits(
             backends, train=not args.no_train)
 
-    findings = len(result.violations) + len(audit_issues)
+    kernel_report, kernel_issues = None, []
+    if args.check and not args.skip_kernel_audit:
+        from . import kernel_audit
+        kernel_report, kernel_issues = kernel_audit.run_kernel_audit()
+
+    mc_result = None
+    if args.check and not args.skip_model_check:
+        from . import model_check
+        mc_result = model_check.explore(max_depth=args.mc_depth)
+
+    df_findings = list(df_result.findings) if df_result is not None else []
+    mc_bad = 0 if mc_result is None or mc_result.ok else 1
+    findings = (len(result.violations) + len(df_findings)
+                + len(audit_issues) + len(kernel_issues) + mc_bad)
+
+    if args.sarif:
+        from . import sarif as sarif_mod
+        log = sarif_mod.build_sarif(
+            violations=result.violations + df_findings,
+            issues=audit_issues + kernel_issues,
+            mc_result=mc_result, rule_table=lint_mod.all_rules())
+        args.sarif.write_text(json.dumps(log, indent=1, sort_keys=True)
+                              + "\n")
+
     if args.as_json:
         out = {
             "ok": findings == 0,
@@ -109,18 +171,46 @@ def main(argv=None) -> int:
         }
         if audit_report is not None:
             out["audit_report"] = audit_report
+        if df_result is not None:
+            out["dataflow"] = {
+                "findings": [v.to_json() for v in df_findings],
+                "suppressed": [s.to_json() for s in df_result.suppressed],
+            }
+        if kernel_report is not None:
+            out["kernel_audit"] = {
+                "report": kernel_report,
+                "issues": [i.to_json() for i in kernel_issues],
+            }
+        if mc_result is not None:
+            out["model_check"] = mc_result.to_json()
         print(json.dumps(out, indent=1, default=str))
         return 1 if findings else 0
 
     for v in result.violations:
         print(v.format())
+    for v in df_findings:
+        print(v.format())
     for i in audit_issues:
         print(i.format())
+    for i in kernel_issues:
+        print(i.format())
+    if mc_result is not None and not mc_result.ok:
+        print(mc_result.violation.format())
     tail = (f"{len(result.violations)} violation(s), "
             f"{len(result.suppressed)} suppressed, "
             f"{len(result.baselined)} baselined")
+    if df_result is not None:
+        tail += (f", {len(df_findings)} dataflow finding(s) "
+                 f"({len(df_result.suppressed)} suppressed)")
     if args.check and not args.skip_jaxpr:
         tail += f", {len(audit_issues)} audit issue(s)"
+    if kernel_report is not None:
+        tail += (f", {len(kernel_issues)} kernel issue(s) over "
+                 f"{kernel_report['candidates']} geometries")
+    if mc_result is not None:
+        tail += (f", model check {'OK' if mc_result.ok else 'VIOLATION'} "
+                 f"({mc_result.states_explored} states, depth "
+                 f"{mc_result.depth_reached})")
     status = "FAILED" if findings else "OK"
     print(f"soniq-analysis {status}: {tail}")
     return 1 if findings else 0

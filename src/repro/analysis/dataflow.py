@@ -1,0 +1,572 @@
+"""SQ008 — interprocedural scale-dataflow pass (DESIGN.md §16).
+
+SQ002 (lint.py) is deliberately intraprocedural: it catches a raw
+abs-max divided in the *same* function. This pass closes the known gap
+where the producer and the divide live in different functions::
+
+    def scale(x):
+        return jnp.max(jnp.abs(x))      # scale-like, never clamped
+
+    def norm(x):
+        return x / scale(x)             # SQ002-silent; SQ008 fires
+
+It is a flow-insensitive abstract interpretation over a three-value
+lattice per value:
+
+    NOT_SCALE (0)  ->  CLAMPED (1)  ->  RAW_SCALE (2)     join = max
+
+* abs-max-style reductions (``jnp.max(jnp.abs(x))``, ``.max()`` over an
+  ``abs``) produce RAW_SCALE;
+* clamp constructs (``jnp.maximum``/``clip``/``clamp``/``where``) lower
+  RAW to CLAMPED — so producers that clamp internally
+  (``core.quant.abs_max_scale``/``per_group_weight_scale``) come out
+  CLAMPED from analyzing their bodies, not from a hard-coded list;
+* the tag propagates through assignments, returns, call arguments, one
+  level of dict/tuple/attribute packing, identity-ish wrappers
+  (``stop_gradient``/``astype``/``reshape``/...), and closures (nested
+  functions are analyzed in the enclosing bindings at their definition
+  site).
+
+Function summaries — return lattice, which params flow to the return,
+and which params are divided-by unclamped inside — are computed to a
+fixpoint over the whole call graph (calls resolve by terminal attribute
+name, conservatively joining over same-named functions; external
+numeric namespaces ``jnp``/``np``/``lax``/... are exempt). A final
+reporting pass flags every divide, divide-call (``lax.div`` /
+``jnp.divide`` / ``jnp.true_divide``) or reciprocal whose divisor is
+RAW_SCALE on some path — including passing a RAW value into a function
+that divides by that parameter unclamped.
+
+Suppressions reuse the lint syntax (``# soniq-lint: disable=
+SQ008(reason)``); a *stale* SQ008 suppression is reported as SQ007 by
+this pass (lint.py leaves SQ008 suppressions alone — this module owns
+them).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.lint import (Suppression, Violation, _call_name,
+                                 _default_root, _parse_suppressions)
+
+NOT_SCALE, CLAMPED, RAW_SCALE = 0, 1, 2
+
+# External numeric namespaces: `<base>.foo(...)` with one of these bases
+# never resolves to a user-defined function, whatever `foo` is called.
+_EXTERNAL_BASES = {"jnp", "np", "numpy", "jax", "lax", "math", "pl",
+                   "pltpu", "plgpu", "scipy", "torch", "tf", "os", "re",
+                   "json", "hashlib", "dataclasses", "functools",
+                   "itertools", "collections", "operator", "logging",
+                   "time", "random"}
+_MAX_TERMINALS = {"max", "amax"}
+_ABS_TERMINALS = {"abs", "absolute"}
+_CLAMP_TERMINALS = {"maximum", "clip", "clamp", "where"}
+# Identity-ish wrappers: the tag rides through unchanged.
+_PROPAGATE_TERMINALS = {"stop_gradient", "optimization_barrier", "asarray",
+                        "array", "astype", "reshape", "ravel", "squeeze",
+                        "expand_dims", "broadcast_to", "copy", "minimum",
+                        "transpose", "flatten", "float32", "bfloat16"}
+_RECIP_TERMINALS = {"reciprocal"}
+_DIV_TERMINALS = {"div", "divide", "true_divide"}
+_FIXPOINT_LIMIT = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class _Val:
+    """Abstract value: lattice point + the analyzed function's params it
+    (still unclamped) depends on — the carrier for interprocedural
+    propagation of both returns and divide-by-param obligations."""
+    lat: int = NOT_SCALE
+    deps: frozenset = frozenset()    # param names of the current function
+
+    def join(self, other: "_Val") -> "_Val":
+        return _Val(max(self.lat, other.lat), self.deps | other.deps)
+
+
+_BOTTOM = _Val()
+
+
+@dataclasses.dataclass
+class _Summary:
+    ret: int = NOT_SCALE             # lattice of the returned value
+    ret_params: Set[str] = dataclasses.field(default_factory=set)
+    div_params: Set[str] = dataclasses.field(default_factory=set)
+
+    def key(self) -> Tuple:
+        return (self.ret, tuple(sorted(self.ret_params)),
+                tuple(sorted(self.div_params)))
+
+
+@dataclasses.dataclass
+class _Func:
+    name: str
+    path: str
+    node: ast.AST                    # FunctionDef / AsyncFunctionDef
+    env0: Dict[str, _Val]            # closure bindings at definition site
+    summary: _Summary = dataclasses.field(default_factory=_Summary)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in
+                list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+
+
+@dataclasses.dataclass
+class DataflowResult:
+    """SQ008 findings that stand, suppressions that fired, and SQ007
+    findings for stale SQ008 suppressions (folded into ``findings``)."""
+    findings: List[Violation] = dataclasses.field(default_factory=list)
+    suppressed: List[Suppression] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def _terminal(func: ast.AST) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _base_name(func: ast.AST) -> str:
+    node = func
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _contains_abs(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Call)
+               and _terminal(sub.func) in _ABS_TERMINALS
+               for sub in ast.walk(node))
+
+
+class _Analysis:
+    """Shared state across the whole multi-module analysis: the terminal-
+    name call table and the node-identity function registry (AST nodes
+    are parsed once, so ``id(node)`` is a stable key across fixpoint
+    iterations)."""
+
+    def __init__(self):
+        self.table: Dict[str, List[_Func]] = {}
+        self.registry: Dict[int, _Func] = {}
+
+    def define(self, node, path: str, env0: Dict[str, _Val]) -> _Func:
+        fn = self.registry.get(id(node))
+        if fn is None:
+            fn = _Func(node.name, path, node, dict(env0))
+            self.registry[id(node)] = fn
+            self.table.setdefault(node.name, []).append(fn)
+        else:
+            fn.env0 = dict(env0)     # refresh the closure snapshot
+        return fn
+
+    def summaries_key(self) -> Tuple:
+        return tuple(f.summary.key() for f in self.registry.values())
+
+
+class _FunctionAnalyzer:
+    """One pass over one function body: computes its summary, registers
+    and recursively analyzes nested definitions with the current bindings
+    as their closure snapshot, and (when ``report`` is set) emits SQ008
+    findings. Flow-insensitive: statements interpret in order, branch
+    bodies share the environment (over-approximating toward RAW is fine —
+    suppressions carry the per-site argument)."""
+
+    def __init__(self, fn: _Func, an: _Analysis,
+                 report: Optional[List[Violation]], lines: List[str]):
+        self.fn = fn
+        self.an = an
+        self.report = report
+        self.lines = lines
+        self.env: Dict[str, _Val] = dict(fn.env0)
+        for p in fn.params:
+            self.env[p] = _Val(NOT_SCALE, frozenset([p]))
+        self.out = _Summary()
+
+    def run(self) -> _Summary:
+        self._exec_body(self.fn.node.body)
+        self.fn.summary = self.out
+        return self.out
+
+    # ------------------------------------------------------------- flags --
+    def _flag(self, node: ast.AST, message: str) -> None:
+        if self.report is None:
+            return
+        line = getattr(node, "lineno", 1)
+        src = (self.lines[line - 1].strip()
+               if line <= len(self.lines) else "")
+        self.report.append(Violation(
+            self.fn.path, line, getattr(node, "col_offset", 0),
+            "SQ008", message, src))
+
+    def _check_divisor(self, node: ast.AST, val: _Val, how: str) -> None:
+        if val.lat == RAW_SCALE:
+            self._flag(node, f"{how} by a scale-like value (raw abs-max) "
+                             f"with no ACT_SCALE_EPS clamp on this path — "
+                             f"an all-zero input makes the divisor 0; "
+                             f"floor it with jnp.maximum(s, "
+                             f"ACT_SCALE_EPS) (core.quant)")
+        # Dividing by a still-unclamped param: the obligation moves to
+        # every call site (fixpoint summary).
+        self.out.div_params |= val.deps
+
+    # ---------------------------------------------------------- resolve --
+    def _resolve(self, func: ast.AST) -> List[_Func]:
+        term = _terminal(func)
+        if not term or term not in self.an.table:
+            return []
+        if isinstance(func, ast.Attribute) and \
+                _base_name(func) in _EXTERNAL_BASES:
+            return []
+        return self.an.table[term]
+
+    def _call_args(self, call: ast.Call, callee: _Func
+                   ) -> Dict[str, _Val]:
+        """Map call arguments onto the callee's param names."""
+        params = callee.params
+        bound: Dict[str, _Val] = {}
+        for i, arg in enumerate(call.args):
+            if not isinstance(arg, ast.Starred) and i < len(params):
+                bound[params[i]] = self.eval(arg)
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg in params:
+                bound[kw.arg] = self.eval(kw.value)
+        return bound
+
+    # ------------------------------------------------------------- eval --
+    def eval(self, node) -> _Val:
+        if node is None:
+            return _BOTTOM
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, _BOTTOM)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node)
+        if isinstance(node, ast.BinOp):
+            return self._eval_binop(node)
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            out = _BOTTOM
+            for e in node.elts:
+                out = out.join(self.eval(e))
+            return out
+        if isinstance(node, ast.Dict):
+            out = _BOTTOM
+            for v in node.values:
+                out = out.join(self.eval(v))
+            return out
+        if isinstance(node, ast.Subscript):
+            self.eval(node.slice)
+            return self.eval(node.value)
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test)
+            return self.eval(node.body).join(self.eval(node.orelse))
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        if isinstance(node, ast.Attribute):
+            # one level of object packing: `obj.scale` carries obj's tag
+            return self.eval(node.value)
+        if isinstance(node, (ast.Compare, ast.BoolOp)):
+            for sub in ast.iter_child_nodes(node):
+                if isinstance(sub, ast.expr):
+                    self.eval(sub)
+            return _BOTTOM
+        if isinstance(node, (ast.ListComp, ast.SetComp,
+                             ast.GeneratorExp)):
+            for gen in node.generators:
+                self.eval(gen.iter)
+            return self.eval(node.elt)
+        if isinstance(node, ast.DictComp):
+            for gen in node.generators:
+                self.eval(gen.iter)
+            return self.eval(node.value)
+        if isinstance(node, ast.Await):
+            return self.eval(node.value)
+        if isinstance(node, (ast.Yield, ast.YieldFrom)):
+            val = self.eval(node.value) if node.value is not None \
+                else _BOTTOM
+            self.out.ret = max(self.out.ret, val.lat)
+            self.out.ret_params |= val.deps
+            return _BOTTOM
+        return _BOTTOM
+
+    def _eval_binop(self, node: ast.BinOp) -> _Val:
+        left = self.eval(node.left)
+        right = self.eval(node.right)
+        if isinstance(node.op, ast.Div):
+            self._check_divisor(node, right, "dividing")
+            # raw-scale / constant is still a raw scale (m / grid_max)
+            return left
+        if isinstance(node.op, ast.Mult):
+            # scale * numeric constant keeps the tag; act * scale is NOT
+            if isinstance(node.right, ast.Constant):
+                return left
+            if isinstance(node.left, ast.Constant):
+                return right
+        return _BOTTOM
+
+    def _eval_call(self, node: ast.Call) -> _Val:
+        term = _terminal(node.func)
+        # abs-max reduction: jnp.max(jnp.abs(x)) / jnp.abs(x).max(...)
+        if term in _MAX_TERMINALS and _contains_abs(node):
+            for arg in node.args:
+                self.eval(arg)
+            return _Val(RAW_SCALE)
+        if term in _CLAMP_TERMINALS:
+            joined = _BOTTOM
+            for arg in node.args:
+                joined = joined.join(self.eval(arg))
+            if joined.lat != NOT_SCALE or joined.deps:
+                return _Val(CLAMPED)
+            return _BOTTOM
+        if term in _RECIP_TERMINALS and node.args:
+            val = self.eval(node.args[0])
+            self._check_divisor(node, val, "taking the reciprocal of")
+            return val
+        if term in _DIV_TERMINALS and len(node.args) >= 2:
+            left = self.eval(node.args[0])
+            self._check_divisor(node, self.eval(node.args[1]),
+                                f"{_call_name(node)}(x, s): dividing")
+            return left
+        if term in _PROPAGATE_TERMINALS:
+            joined = _BOTTOM
+            if isinstance(node.func, ast.Attribute):
+                joined = joined.join(self.eval(node.func.value))
+            for arg in node.args:
+                joined = joined.join(self.eval(arg))
+            return joined
+        callees = self._resolve(node.func)
+        if callees:
+            out = _BOTTOM
+            for callee in callees:
+                bound = self._call_args(node, callee)
+                s = callee.summary
+                # param divided-by unclamped inside the callee: RAW here
+                # is the cross-function SQ002 bug; a dep means our own
+                # caller owns the obligation next.
+                for p in sorted(s.div_params):
+                    v = bound.get(p, _BOTTOM)
+                    if v.lat == RAW_SCALE:
+                        self._flag(node, f"passing a raw (unclamped) "
+                                         f"abs-max into {callee.name}() "
+                                         f"which divides by parameter "
+                                         f"'{p}' with no clamp on that "
+                                         f"path")
+                    self.out.div_params |= v.deps
+                ret = _Val(s.ret)
+                for p in sorted(s.ret_params):
+                    ret = ret.join(bound.get(p, _BOTTOM))
+                out = out.join(ret)
+            for kw in node.keywords:
+                self.eval(kw.value)
+            return out
+        # Unknown external call: evaluate children (divides inside
+        # argument expressions still get checked), result untagged.
+        for arg in node.args:
+            self.eval(arg)
+        for kw in node.keywords:
+            self.eval(kw.value)
+        if isinstance(node.func, ast.Attribute):
+            self.eval(node.func.value)
+        return _BOTTOM
+
+    # -------------------------------------------------------- statements --
+    def _exec_body(self, body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            self._exec(stmt)
+
+    def _assign_target(self, target, val: _Val) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign_target(e, val)
+        elif isinstance(target, ast.Starred):
+            self._assign_target(target.value, val)
+        # Subscript/Attribute stores: no tracked cell, drop.
+
+    def _exec(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Nested (or module/class-level) definition: register with
+            # the CURRENT bindings as its closure snapshot and analyze it
+            # in place — the closure arm of the propagation contract.
+            for deco in stmt.decorator_list:
+                self.eval(deco)
+            fn = self.an.define(stmt, self.fn.path, self.env)
+            _FunctionAnalyzer(fn, self.an, self.report, self.lines).run()
+            self.env[stmt.name] = _BOTTOM
+        elif isinstance(stmt, ast.ClassDef):
+            self._exec_body(stmt.body)
+        elif isinstance(stmt, ast.Assign):
+            if isinstance(stmt.value, ast.Tuple) and \
+                    len(stmt.targets) == 1 and \
+                    isinstance(stmt.targets[0], (ast.Tuple, ast.List)) \
+                    and len(stmt.targets[0].elts) == len(stmt.value.elts):
+                for t, v in zip(stmt.targets[0].elts, stmt.value.elts):
+                    self._assign_target(t, self.eval(v))
+            else:
+                val = self.eval(stmt.value)
+                for t in stmt.targets:
+                    self._assign_target(t, val)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign_target(stmt.target, self.eval(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            left = self.eval(stmt.target)
+            right = self.eval(stmt.value)
+            if isinstance(stmt.op, ast.Div):
+                self._check_divisor(stmt, right, "dividing (/=)")
+                self._assign_target(stmt.target, left)
+            else:
+                self._assign_target(stmt.target, _BOTTOM)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                val = self.eval(stmt.value)
+                self.out.ret = max(self.out.ret, val.lat)
+                self.out.ret_params |= val.deps
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self.eval(stmt.test)
+            self._exec_body(stmt.body)
+            self._exec_body(stmt.orelse)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.eval(stmt.iter)
+            self._assign_target(stmt.target, _BOTTOM)
+            self._exec_body(stmt.body)
+            self._exec_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self.eval(stmt.test)
+            self._exec_body(stmt.body)
+            self._exec_body(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.eval(item.context_expr)
+            self._exec_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._exec_body(stmt.body)
+            for handler in stmt.handlers:
+                self._exec_body(handler.body)
+            self._exec_body(stmt.orelse)
+            self._exec_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.Assert, ast.Raise, ast.Delete)):
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.expr):
+                    self.eval(sub)
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+
+def _module_func(path: str, tree: ast.Module) -> _Func:
+    """Wrap a module's top-level statements as a pseudo-function: running
+    it interprets module-level code AND (via the FunctionDef handler)
+    registers + analyzes every function, method, and nested closure."""
+    node = ast.FunctionDef(
+        name=f"<module:{path or 'source'}>",
+        args=ast.arguments(posonlyargs=[], args=[], vararg=None,
+                           kwonlyargs=[], kw_defaults=[], kwarg=None,
+                           defaults=[]),
+        body=list(tree.body), decorator_list=[], returns=None,
+        type_comment=None)
+    ast.fix_missing_locations(node)
+    return _Func(node.name, path, node, {})
+
+
+def analyze_sources(sources: List[Tuple[str, str]]) -> DataflowResult:
+    """Analyze ``[(path, source), ...]`` as one program (cross-module
+    calls resolve across the whole list)."""
+    modules: List[Tuple[_Func, List[str], str, str]] = []
+    findings: List[Violation] = []
+    for path, source in sources:
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            findings.append(Violation(path, e.lineno or 1, e.offset or 0,
+                                      "SQ000",
+                                      f"syntax error: {e.msg}"))
+            continue
+        modules.append((_module_func(path, tree), source.splitlines(),
+                        path, source))
+    an = _Analysis()
+    for _ in range(_FIXPOINT_LIMIT):
+        before = an.summaries_key()
+        for mod_fn, lines, _path, _src in modules:
+            _FunctionAnalyzer(mod_fn, an, None, lines).run()
+        if an.summaries_key() == before:
+            break
+    raw: List[Violation] = []
+    for mod_fn, lines, _path, _src in modules:
+        _FunctionAnalyzer(mod_fn, an, raw, lines).run()
+    # Dedup (a site reachable through several same-named callees flags
+    # once) and apply per-file SQ008 suppressions + staleness (SQ007).
+    seen: set = set()
+    per_file: Dict[str, List[Violation]] = {}
+    for v in raw:
+        k = (v.path, v.line, v.col, v.message)
+        if k not in seen:
+            seen.add(k)
+            per_file.setdefault(v.path, []).append(v)
+    result = DataflowResult(findings=list(findings))
+    for _mod_fn, lines, path, source in modules:
+        supp_map, _malformed = _parse_suppressions(source, path)
+        used: set = set()
+        for v in per_file.get(path, []):
+            reason = supp_map.get(v.line, {}).get("SQ008")
+            if reason is not None:
+                used.add(v.line)
+                result.suppressed.append(Suppression(
+                    path, v.line, "SQ008", reason, v.source_line))
+            else:
+                result.findings.append(v)
+        for line in sorted(supp_map):
+            if "SQ008" in supp_map[line] and line not in used:
+                src = (lines[line - 1].strip()
+                       if line <= len(lines) else "")
+                result.findings.append(Violation(
+                    path, line, 0, "SQ007",
+                    "unused suppression: SQ008 does not fire on this "
+                    "line — the hazard was fixed or moved; remove the "
+                    "stale disable=SQ008(...)", src))
+    result.findings.sort(key=lambda v: (v.path, v.line, v.col))
+    return result
+
+
+def analyze_source(source: str, path: str = "") -> DataflowResult:
+    """Single-source convenience wrapper (fixtures and tests)."""
+    return analyze_sources([(path, source)])
+
+
+def analyze_paths(paths: Iterable[Path],
+                  root: Optional[Path] = None) -> DataflowResult:
+    """Analyze files/directories (``.py`` recursively) as one program,
+    with repo-relative paths like :func:`lint.lint_paths`."""
+    paths = [Path(p) for p in paths]
+    if root is None:
+        root = _default_root(paths)
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    sources: List[Tuple[str, str]] = []
+    for f in files:
+        rel = f.resolve()
+        if root is not None:
+            try:
+                rel = rel.relative_to(Path(root).resolve())
+            except ValueError:
+                pass
+        sources.append((rel.as_posix(), f.read_text()))
+    return analyze_sources(sources)

@@ -24,6 +24,15 @@ earlier PR (see CHANGES.md) and must never be re-writable:
            ``time.time()`` or unseeded ``np.random``/stdlib-``random``
            draw baked into a jitted function changes numerics between
            traces, which no parity pin can survive.
+    SQ007  unused suppression — a ``disable=SQxxx(...)`` whose rule no
+           longer fires on that line: the hazard was fixed or moved, and
+           a stale reason would silently swallow the rule the next time
+           it fires there for a *new* bug.
+
+SQ002 covers the divide spellings: ``x / s``, ``x * (1.0 / s)``,
+``jnp.reciprocal(s)``, ``lax.div(x, s)`` / ``jnp.divide`` /
+``jnp.true_divide``. The *interprocedural* version (producer and divide
+in different functions) is SQ008, owned by ``repro.analysis.dataflow``.
 
 Suppressions are inline and must carry a reason::
 
@@ -268,6 +277,16 @@ def _is_raw_absmax(node: ast.AST) -> bool:
     return False
 
 
+# Function-call divide/reciprocal spellings SQ002 must also catch: the
+# hazard is identical whether the divide is an operator or a call.
+_DIV_FN_CALLS = {"lax.div", "jax.lax.div",
+                 "jnp.divide", "np.divide", "jax.numpy.divide",
+                 "jnp.true_divide", "np.true_divide",
+                 "jax.numpy.true_divide"}
+_RECIP_CALLS = {"jnp.reciprocal", "np.reciprocal", "jax.numpy.reciprocal",
+                "lax.reciprocal", "jax.lax.reciprocal"}
+
+
 @rule("SQ002", "unclamped-scale-divide",
       "PR 4 zero-row activation-scale divide: an all-zero padding row's "
       "abs-max of 0 became a divisor — NaN/Inf logits for every row once "
@@ -275,11 +294,19 @@ def _is_raw_absmax(node: ast.AST) -> bool:
 class _ScaleDivideRule(ast.NodeVisitor):
     """Intraprocedural: record names assigned a raw (unclamped) abs-max
     expression, flag divisions by them — or by such an expression inline.
-    Also flags explicitly disabling the clamp (``eps=0``)."""
+    Catches the operator form ``x / s`` (so ``x * (1.0 / s)`` trips via
+    the inner divide), the call forms ``lax.div(x, s)`` /
+    ``jnp.divide(x, s)`` / ``jnp.true_divide(x, s)``, and reciprocals
+    ``jnp.reciprocal(s)``. Also flags explicitly disabling the clamp
+    (``eps=0``)."""
 
     def __init__(self, ctx: _FileContext):
         self.ctx = ctx
         self._raw: Dict[str, ast.AST] = {}
+
+    def _is_raw_scale(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Name) and node.id in self._raw) \
+            or _is_raw_absmax(node)
 
     def _enter_scope(self, node):
         saved = self._raw
@@ -303,19 +330,31 @@ class _ScaleDivideRule(ast.NodeVisitor):
         self.generic_visit(node)
 
     def visit_BinOp(self, node: ast.BinOp):
-        if isinstance(node.op, ast.Div):
-            d = node.right
-            if (isinstance(d, ast.Name) and d.id in self._raw) \
-                    or _is_raw_absmax(d):
-                self.ctx.add(
-                    node, "SQ002",
-                    "dividing by a raw abs-max with no epsilon clamp — "
-                    "an all-zero row yields a 0 divisor; floor it with "
-                    "jnp.maximum(m, ACT_SCALE_EPS) (core.quant)")
+        if isinstance(node.op, ast.Div) and self._is_raw_scale(node.right):
+            self.ctx.add(
+                node, "SQ002",
+                "dividing by a raw abs-max with no epsilon clamp — "
+                "an all-zero row yields a 0 divisor; floor it with "
+                "jnp.maximum(m, ACT_SCALE_EPS) (core.quant)")
         self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call):
         name = _call_name(node)
+        if name in _DIV_FN_CALLS and len(node.args) >= 2 and \
+                self._is_raw_scale(node.args[1]):
+            self.ctx.add(
+                node, "SQ002",
+                f"{name}(x, s) divides by a raw abs-max with no epsilon "
+                f"clamp — an all-zero row yields a 0 divisor; floor it "
+                f"with jnp.maximum(m, ACT_SCALE_EPS) (core.quant)")
+        if name in _RECIP_CALLS and node.args and \
+                self._is_raw_scale(node.args[0]):
+            self.ctx.add(
+                node, "SQ002",
+                f"{name}(s) of a raw abs-max with no epsilon clamp — "
+                f"an all-zero row makes the reciprocal Inf and the "
+                f"multiply NaN; floor s with jnp.maximum(m, "
+                f"ACT_SCALE_EPS) (core.quant) first")
         if name.endswith("abs_max_scale") or \
                 name.endswith("per_group_weight_scale"):
             for kw in node.keywords:
@@ -539,6 +578,27 @@ class _NondeterminismRule(ast.NodeVisitor):
 
 
 # --------------------------------------------------------------------------
+# SQ007 — unused (stale) suppression
+# --------------------------------------------------------------------------
+
+@rule("SQ007", "unused-suppression",
+      "a stale disable=SQxxx(reason) keeps claiming a hazard that no "
+      "longer exists — and silently swallows the rule the next time it "
+      "fires on that line for a brand-new bug")
+class _UnusedSuppressionRule(ast.NodeVisitor):
+    """Driver-implemented rule: :func:`lint_source` reports any parsed
+    ``disable=SQxxx(...)`` whose rule ran on this file but did not fire on
+    the suppressed line. Registered here (with a no-op visitor) so the
+    code shows up in the registry / ``--list-rules`` and participates in
+    ``codes=`` selection. Suppression codes whose rule did *not* run in
+    this invocation (e.g. ``SQ008``, owned by the dataflow pass) are left
+    alone — their owner validates them."""
+
+    def __init__(self, ctx: _FileContext):
+        self.ctx = ctx
+
+
+# --------------------------------------------------------------------------
 # Suppression parsing
 # --------------------------------------------------------------------------
 
@@ -659,13 +719,39 @@ def lint_source(source: str, path: str = "",
     supp_map, malformed = _parse_suppressions(source, path)
     violations: List[Violation] = list(malformed)
     suppressed: List[Suppression] = []
+    used: set = set()                       # (line, code) that fired
     for v in sorted(ctx.violations, key=lambda v: (v.line, v.col, v.code)):
         reason = supp_map.get(v.line, {}).get(v.code)
         if reason is not None:
+            used.add((v.line, v.code))
             suppressed.append(Suppression(v.path, v.line, v.code, reason,
                                           v.source_line))
         else:
             violations.append(v)
+    # SQ007: any suppression whose rule ran in this invocation but did
+    # not fire on its line is itself stale. Codes outside this run (a
+    # `codes=` subset, or SQ008 which the dataflow pass owns) are left to
+    # their owner; disable=SQ007(reason) on the same line is honored.
+    ran = {r.code for r in all_rules()
+           if wanted is None or r.code in wanted}
+    if "SQ007" in ran:
+        lines = ctx.lines
+        for line in sorted(supp_map):
+            src = lines[line - 1].strip() if line <= len(lines) else ""
+            for code in sorted(supp_map[line]):
+                if code == "SQ007" or code not in ran or \
+                        (line, code) in used:
+                    continue
+                reason7 = supp_map[line].get("SQ007")
+                if reason7 is not None:
+                    suppressed.append(Suppression(path, line, "SQ007",
+                                                  reason7, src))
+                else:
+                    violations.append(Violation(
+                        path, line, 0, "SQ007",
+                        f"unused suppression: {code} does not fire on "
+                        f"this line — the hazard was fixed or moved; "
+                        f"remove the stale disable={code}(...)", src))
     return LintResult(violations, suppressed)
 
 

@@ -1,0 +1,333 @@
+"""Explicit-state model checker for the host ``PagePool`` state machine
+(DESIGN.md §16).
+
+The fuzz harness in tests/test_kv_pool.py samples random operation
+interleavings; this module replaces "the fuzzer found nothing" with
+"exhaustively impossible at this scope": a breadth-first search over
+*all* interleavings of the engine-visible allocator operations on a
+small pool, asserting the shared invariants (``kv_pool.
+invariant_violations`` / ``kv_pool.step_ops_violations``) in every
+reachable state. Because the search is breadth-first over canonicalized
+states, the first violation found carries a *minimal* operation trace —
+the shortest engine history that corrupts the pool.
+
+Operation alphabet (mirrors ``DecodeEngine``'s use of the pool):
+
+    submit(p)             note_submit + admissible reservation for
+                          prompt ``p`` (one pending submission per
+                          prompt keeps the state space canonical: the
+                          request id IS the prompt index)
+    cancel(p)             forget_submit of a pending submission
+    admit(p)              admit the pending submission into a free slot
+                          (shared-prefix pages map here)
+    feed(slot, w)         prepare ``w`` tokens (allocation + COW), as
+                          chunked prefill / decode does
+    rollback(slot)        un-commit the last fed token (speculative
+                          verify rejection, DESIGN.md §14)
+    note_filled(slot)     register finished prompt pages in the prefix
+                          map
+    evict(slot)           the engine cancel path: note_filled + release
+    release(slot)         drop every page reference
+    release_feed(a, b, w) release slot ``a`` then feed slot ``b`` with
+                          ONE shared StepOps batch — the engine's
+                          evict-then-admit step shape, the only
+                          sequence that can re-allocate a page freed in
+                          the same batch (the poison-cancel contract)
+
+Each operation clones the pool (``copy.deepcopy`` — mutant subclasses
+used by the tests survive the clone), applies the call(s) with a fresh
+``StepOps``, and checks both invariant sets immediately. States are
+canonicalized into hashable keys that EXCLUDE the observability-only
+counters (``lookups``/``hits``/``peak_resident``) but keep everything
+behavior-relevant, including free-list and LRU *order* (both determine
+future allocation/eviction choices).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve import kv_pool
+from repro.serve.scheduler import Request
+
+# --------------------------------------------------------------------------
+# Configuration and results
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MCConfig:
+    """A deliberately tiny pool: 3 usable pages, 2 slots, 2-token pages,
+    2-page tables, and two prompts that share their first page (so the
+    prefix-sharing / COW arm of the state machine is exercised). Small
+    enough that the BFS closes; big enough that every operation in the
+    alphabet is enabled somewhere."""
+    num_pages: int = 4               # page 0 is the reserved null page
+    page_size: int = 2
+    pages_per_seq: int = 2
+    max_batch: int = 2
+    poison: bool = True              # poison path is a strict superset
+    prompts: Tuple[Tuple[int, ...], ...] = ((1, 2, 3), (1, 2))
+    feed_widths: Tuple[int, ...] = (1, 2)
+
+    @property
+    def ring_tokens(self) -> int:
+        return self.pages_per_seq * self.page_size
+
+
+@dataclasses.dataclass(frozen=True)
+class MCViolation:
+    trace: Tuple[str, ...]           # minimal operation trace
+    messages: Tuple[str, ...]        # invariant violation strings
+
+    def format(self) -> str:
+        steps = "\n".join(f"  {i + 1}. {op}"
+                          for i, op in enumerate(self.trace))
+        msgs = "\n".join(f"  - {m}" for m in self.messages)
+        return (f"PagePool invariant violation after "
+                f"{len(self.trace)} op(s):\n{steps}\nviolated:\n{msgs}")
+
+
+@dataclasses.dataclass
+class MCResult:
+    violation: Optional[MCViolation]
+    states_explored: int
+    depth_reached: int
+    config: MCConfig
+
+    @property
+    def ok(self) -> bool:
+        return self.violation is None
+
+    def to_json(self) -> Dict:
+        return {
+            "ok": self.ok,
+            "states_explored": self.states_explored,
+            "depth_reached": self.depth_reached,
+            "trace": list(self.violation.trace) if self.violation else [],
+            "messages": (list(self.violation.messages)
+                         if self.violation else []),
+        }
+
+
+# --------------------------------------------------------------------------
+# Harness state (the engine-side bookkeeping the pool does not own)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Harness:
+    # slot -> [prompt index, tokens fed]
+    slots: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    pending: Tuple[int, ...] = ()    # prompt indices with a live submit
+
+    def clone(self) -> "_Harness":
+        return _Harness({s: list(v) for s, v in self.slots.items()},
+                        self.pending)
+
+
+def _prompt(cfg: MCConfig, pi: int) -> np.ndarray:
+    return np.asarray(cfg.prompts[pi], np.int32)
+
+
+def _state_key(pool, h: _Harness) -> Tuple:
+    """Canonical hashable key for (pool, harness). Order-sensitive where
+    behavior is order-sensitive (free stack, cached LRU); the
+    observability counters are excluded so states differing only in
+    telemetry merge."""
+    return (
+        tuple(pool.free),
+        tuple(pool.cached.items()),
+        pool.table.tobytes(),
+        tuple(int(c) for c in pool.refcount),
+        tuple(sorted(pool.page_hash.items())),
+        tuple(sorted(pool.prefix_map.items())),
+        tuple(sorted(pool._pending.items())),
+        tuple(sorted(pool._target_pages.items())),
+        tuple(sorted((s, tuple(v)) for s, v in pool._slot_hashes.items())),
+        tuple(sorted((s, tuple(v)) for s, v in h.slots.items())),
+        tuple(sorted(h.pending)),
+    )
+
+
+# --------------------------------------------------------------------------
+# Operation application
+# --------------------------------------------------------------------------
+
+
+def _apply(cfg: MCConfig, pool, h: _Harness, op: Tuple) -> List[str]:
+    """Mutate (pool, h) in place per ``op``; return invariant violations
+    observed immediately after (empty = sound). Engine-impossible calls
+    (admission refusals, allocator exhaustion) are modeled as no-ops /
+    clean failures exactly as the engine handles them."""
+    kind = op[0]
+    bad: List[str] = []
+    if kind == "submit":
+        pi = op[1]
+        pool.note_submit(pi, _prompt(cfg, pi))
+        req = Request(prompt=_prompt(cfg, pi), max_new_tokens=2,
+                      request_id=pi)
+        if not pool.admissible(req):
+            pool.forget_submit(pi)
+        else:
+            h.pending = tuple(sorted(set(h.pending) | {pi}))
+    elif kind == "cancel":
+        pi = op[1]
+        pool.forget_submit(pi)
+        h.pending = tuple(p for p in h.pending if p != pi)
+    elif kind == "admit":
+        pi = op[1]
+        slot = min(s for s in range(cfg.max_batch) if s not in h.slots)
+        req = Request(prompt=_prompt(cfg, pi), max_new_tokens=2,
+                      request_id=pi)
+        shared = pool.admit(slot, req)
+        h.slots[slot] = [pi, shared]
+        h.pending = tuple(p for p in h.pending if p != pi)
+    elif kind == "feed":
+        _, slot, width = op
+        ops = kv_pool.StepOps()
+        try:
+            pool.prepare(slot, h.slots[slot][1], width, ops)
+        except RuntimeError:
+            return kv_pool.invariant_violations(pool)  # clean exhaustion
+        bad += kv_pool.step_ops_violations(pool, ops)
+        h.slots[slot][1] += width
+    elif kind == "note_filled":
+        _, slot = op
+        pi, fed = h.slots[slot]
+        pool.note_filled(slot, _prompt(cfg, pi), fed)
+    elif kind == "rollback":
+        _, slot = op
+        fed = h.slots[slot][1]
+        ops = kv_pool.StepOps()
+        pool.rollback(slot, fed - 1, fed, ops)
+        bad += kv_pool.step_ops_violations(pool, ops)
+        h.slots[slot][1] = fed - 1
+    elif kind == "evict":
+        _, slot = op
+        pi, fed = h.slots[slot]
+        ops = kv_pool.StepOps()
+        pool.note_filled(slot, _prompt(cfg, pi), fed)
+        pool.release(slot, ops)
+        bad += kv_pool.step_ops_violations(pool, ops)
+        del h.slots[slot]
+    elif kind == "release":
+        _, slot = op
+        ops = kv_pool.StepOps()
+        pool.release(slot, ops)
+        bad += kv_pool.step_ops_violations(pool, ops)
+        del h.slots[slot]
+    elif kind == "release_feed":
+        # The engine's evict-then-admit step: one StepOps batch spans the
+        # release and the next allocation, which is the only way a page
+        # freed in this batch can be re-allocated in it — the sequence
+        # the poison-cancel contract exists for.
+        _, rslot, fslot, width = op
+        ops = kv_pool.StepOps()
+        pool.release(rslot, ops)
+        del h.slots[rslot]
+        try:
+            pool.prepare(fslot, h.slots[fslot][1], width, ops)
+        except RuntimeError:
+            return (kv_pool.invariant_violations(pool)
+                    + kv_pool.step_ops_violations(pool, ops))
+        bad += kv_pool.step_ops_violations(pool, ops)
+        h.slots[fslot][1] += width
+    else:                            # pragma: no cover - alphabet is closed
+        raise AssertionError(f"unknown op {op!r}")
+    return bad + kv_pool.invariant_violations(pool)
+
+
+def _enabled(cfg: MCConfig, pool, h: _Harness) -> List[Tuple]:
+    """Deterministically ordered operations enabled in this state."""
+    ops: List[Tuple] = []
+    in_flight = set(h.pending) | {v[0] for v in h.slots.values()}
+    for pi in range(len(cfg.prompts)):
+        if pi not in in_flight:
+            ops.append(("submit", pi))
+    have_free_slot = len(h.slots) < cfg.max_batch
+    for pi in h.pending:
+        ops.append(("cancel", pi))
+        if have_free_slot:
+            ops.append(("admit", pi))
+    # One page past the ring is enough to exercise the wrap path without
+    # letting `fed` grow the state space unboundedly.
+    fed_cap = cfg.ring_tokens + cfg.page_size
+    for slot in sorted(h.slots):
+        _pi, fed = h.slots[slot]
+        for w in cfg.feed_widths:
+            if fed + w <= fed_cap:
+                ops.append(("feed", slot, w))
+        if 1 <= fed <= cfg.ring_tokens:
+            ops.append(("rollback", slot))
+        ops.append(("note_filled", slot))
+        ops.append(("evict", slot))
+        ops.append(("release", slot))
+        for other in sorted(h.slots):
+            if other != slot:
+                ops.append(("release_feed", slot, other,
+                            cfg.feed_widths[0]))
+    return ops
+
+
+def _fmt_op(op: Tuple) -> str:
+    return f"{op[0]}({', '.join(str(a) for a in op[1:])})"
+
+
+# --------------------------------------------------------------------------
+# BFS driver
+# --------------------------------------------------------------------------
+
+
+def explore(config: Optional[MCConfig] = None,
+            pool_factory: Callable = kv_pool.PagePool,
+            max_depth: int = 6,
+            max_states: int = 250_000) -> MCResult:
+    """BFS all operation interleavings to ``max_depth``. Returns the first
+    (hence minimal-trace) invariant violation, or a clean :class:`MCResult`.
+
+    ``pool_factory`` lets the tests run the same exploration against
+    seeded-bug ``PagePool`` subclasses (the mutants of DESIGN.md §16);
+    deep-copy cloning preserves the subclass. ``max_states`` is a safety
+    valve: exceeding it raises, because a truncated search would report
+    "exhaustively impossible" over a space it did not finish."""
+    cfg = config or MCConfig()
+    pool = pool_factory(cfg.num_pages, cfg.page_size, cfg.pages_per_seq,
+                        cfg.max_batch, poison=cfg.poison)
+    h = _Harness()
+    root_bad = kv_pool.invariant_violations(pool)
+    if root_bad:
+        return MCResult(MCViolation((), tuple(root_bad)), 1, 0, cfg)
+    frontier = deque([(pool, h, ())])
+    seen = {_state_key(pool, h)}
+    explored = 1
+    depth_reached = 0
+    while frontier:
+        pool, h, trace = frontier.popleft()
+        if len(trace) >= max_depth:
+            continue
+        for op in _enabled(cfg, pool, h):
+            p2 = copy.deepcopy(pool)
+            h2 = h.clone()
+            bad = _apply(cfg, p2, h2, op)
+            new_trace = trace + (_fmt_op(op),)
+            if bad:
+                return MCResult(MCViolation(new_trace, tuple(bad)),
+                                explored, len(new_trace), cfg)
+            key = _state_key(p2, h2)
+            if key in seen:
+                continue
+            seen.add(key)
+            explored += 1
+            depth_reached = max(depth_reached, len(new_trace))
+            if explored > max_states:
+                raise RuntimeError(
+                    f"model checker exceeded max_states={max_states} "
+                    f"before closing depth {max_depth} — shrink the "
+                    f"MCConfig or raise the valve explicitly")
+            frontier.append((p2, h2, new_trace))
+    return MCResult(None, explored, depth_reached, cfg)

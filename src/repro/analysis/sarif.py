@@ -1,0 +1,123 @@
+"""SARIF 2.1.0 emitter for the analyzer (DESIGN.md §16).
+
+One run, one driver (``soniq-analysis``), four result families:
+
+* lint/dataflow ``Violation``s — physical locations (repo-relative path,
+  1-based line/column) and their SQ rule ids;
+* jaxpr-audit / kernel-audit ``Issue``s — rule id is the check name
+  (``segment_dtype``, ``kernel_geometry``, ...); the ``where`` context
+  string rides in the message and the location anchors to the audited
+  subsystem's source file (GitHub code scanning requires a physical
+  location even for whole-subsystem findings);
+* a model-checker violation — anchored to ``serve/kv_pool.py`` with the
+  minimal trace in the message.
+
+The JSON report (``--json``) stays the machine interface of record; the
+SARIF file exists so CI can upload findings to code scanning. Keys are
+sorted and the layout is deterministic for a given set of findings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+           "master/Schemata/sarif-schema-2.1.0.json")
+
+# Where a subsystem-level Issue (no single source line) anchors. Paths
+# are repo-relative; GitHub drops results whose uri does not resolve, so
+# these name the files whose contracts the checks verify.
+_CHECK_ANCHORS = {
+    "recompile": "src/repro/serve/engine.py",
+    "segment_dtype": "src/repro/backend/base.py",
+    "callback": "src/repro/serve/engine.py",
+    "donation": "src/repro/serve/engine.py",
+    "traffic": "src/repro/serve/engine.py",
+    "kernel_geometry": "src/repro/backend/pallas.py",
+    "kernel_dtype": "src/repro/backend/pallas.py",
+    "kernel_mapping": "src/repro/backend/pallas.py",
+    "model_check": "src/repro/serve/kv_pool.py",
+}
+_FALLBACK_ANCHOR = "src/repro/analysis/__main__.py"
+
+
+def _rule(rule_id: str, description: str) -> Dict:
+    return {"id": rule_id,
+            "shortDescription": {"text": description or rule_id}}
+
+
+def _violation_result(v) -> Dict:
+    return {
+        "ruleId": v.code,
+        "level": "error",
+        "message": {"text": v.message},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": str(v.path).replace("\\", "/"),
+                                     "uriBaseId": "SRCROOT"},
+                "region": {"startLine": max(1, int(v.line)),
+                           "startColumn": max(1, int(v.col) + 1)},
+            },
+        }],
+    }
+
+
+def _issue_result(issue) -> Dict:
+    anchor = _CHECK_ANCHORS.get(issue.check, _FALLBACK_ANCHOR)
+    return {
+        "ruleId": issue.check,
+        "level": "error",
+        "message": {"text": f"{issue.where}: {issue.message}"},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": anchor, "uriBaseId": "SRCROOT"},
+                "region": {"startLine": 1},
+            },
+        }],
+    }
+
+
+def build_sarif(violations: Iterable = (), issues: Iterable = (),
+                mc_result=None, rule_table: Optional[Iterable] = None
+                ) -> Dict:
+    """Assemble the SARIF log dict. ``violations`` are lint/dataflow
+    ``Violation``s, ``issues`` are jaxpr/kernel-audit ``Issue``s,
+    ``mc_result`` an ``MCResult`` (its violation becomes one result),
+    ``rule_table`` the lint Rule objects for rule metadata."""
+    results: List[Dict] = [_violation_result(v) for v in violations]
+    rule_ids: Dict[str, str] = {}
+    for r in (rule_table or ()):
+        rule_ids[r.code] = r.rationale
+    for issue in issues:
+        results.append(_issue_result(issue))
+        rule_ids.setdefault(issue.check, f"analyzer check '{issue.check}'")
+    if mc_result is not None and mc_result.violation is not None:
+        results.append({
+            "ruleId": "model_check",
+            "level": "error",
+            "message": {"text": mc_result.violation.format()},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": _CHECK_ANCHORS["model_check"],
+                        "uriBaseId": "SRCROOT"},
+                    "region": {"startLine": 1},
+                },
+            }],
+        })
+        rule_ids.setdefault("model_check",
+                            "PagePool interleaving model checker")
+    for res in results:
+        rule_ids.setdefault(res["ruleId"], res["ruleId"])
+    return {
+        "$schema": _SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "soniq-analysis",
+                "rules": [_rule(k, rule_ids[k])
+                          for k in sorted(rule_ids)],
+            }},
+            "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+            "results": results,
+        }],
+    }

@@ -307,6 +307,93 @@ def paged_payload_bytes_per_page(cache) -> int:
 
 
 # ======================================================= host allocator ====
+def invariant_violations(pool) -> List[str]:
+    """The PagePool state invariants as one shared, assert-free definition
+    (DESIGN.md §16): consumed by :meth:`PagePool.check`, the fuzz harness
+    in tests/test_kv_pool.py, and the explicit-state model checker
+    (``repro.analysis.model_check``). Returns human-readable violation
+    strings; empty means the state is sound.
+
+    * the free list, cached LRU and mapped set partition the non-null
+      pages (no double-free, no lost pages, no overlap);
+    * the null page 0 is never on any list and never mapped;
+    * ``refcount[p]`` equals the number of page-table references to ``p``;
+    * every cached-LRU page is registered in the prefix map, and the
+      prefix map and per-page hashes agree.
+    """
+    out: List[str] = []
+    every = set(range(1, pool.num_pages))
+    free = set(pool.free)
+    cached = set(pool.cached)
+    mapped = {int(p) for p in np.unique(pool.table[pool.table >= 0])}
+    if len(free) != len(pool.free):
+        dupes = sorted(p for p in free if pool.free.count(p) > 1)
+        out.append(f"duplicate page(s) on free list: {dupes}")
+    if 0 in free | cached | mapped:
+        out.append("null page 0 leaked into free/cached/mapped")
+    for a, b, an, bn in ((free, cached, "free", "cached"),
+                         (free, mapped, "free", "mapped"),
+                         (cached, mapped, "cached", "mapped")):
+        both = a & b
+        if both:
+            out.append(f"page(s) in both {an} and {bn}: {sorted(both)}")
+    lost = every - (free | cached | mapped)
+    if lost:
+        out.append(f"lost page(s) (free/cached/mapped cover nothing): "
+                   f"{sorted(lost)}")
+    want = np.zeros(pool.num_pages, np.int64)
+    pids, counts = np.unique(pool.table[pool.table >= 0],
+                             return_counts=True)
+    want[pids] = counts
+    if not (want == pool.refcount).all():
+        drift = [(int(p), int(want[p]), int(pool.refcount[p]))
+                 for p in np.nonzero(want != pool.refcount)[0]]
+        out.append(f"refcount drift (pid, table refs, refcount): {drift}")
+    for pid in sorted(cached):
+        if pid not in pool.page_hash:
+            out.append(f"cached page {pid} is not registered")
+    for digest, pid in pool.prefix_map.items():
+        if pool.page_hash.get(pid) != digest:
+            out.append(f"prefix map / page hash drift at page {pid}")
+    return out
+
+
+def step_ops_violations(pool, ops: "StepOps") -> List[str]:
+    """Check one engine-step batch of accumulated :class:`StepOps` against
+    the no-shared-write and poison-cancel contracts, AFTER the allocator
+    calls that filled it (shared definition for the fuzz harness and the
+    model checker):
+
+    * a wiped (freshly allocated) page must be exclusively ours
+      (refcount 1) and not registered prefix content;
+    * a COW destination likewise — COW exists precisely so shared or
+      registered pages are never in-place write targets;
+    * no page is both wiped and poisoned in one batch: the engine applies
+      poisons after wipes, so a page freed and reallocated within the
+      same batch must have had its poison cancelled (:meth:`_alloc`) or
+      the stale poison corrupts the fresh allocation.
+    """
+    out: List[str] = []
+    for pid in ops.wipes:
+        if pool.refcount[pid] != 1:
+            out.append(f"wiped page {pid} has refcount "
+                       f"{int(pool.refcount[pid])} (must be exclusive)")
+        if pid in pool.page_hash:
+            out.append(f"wiped page {pid} is registered prefix content")
+    for _src, dst in ops.copies:
+        if pool.refcount[dst] != 1:
+            out.append(f"COW destination {dst} has refcount "
+                       f"{int(pool.refcount[dst])} (must be exclusive)")
+        if dst in pool.page_hash:
+            out.append(f"COW destination {dst} is registered prefix "
+                       f"content")
+    stale = set(ops.poisons) & set(ops.wipes)
+    if stale:
+        out.append(f"page(s) both wiped and poisoned in one batch "
+                   f"(poison-cancel missed): {sorted(stale)}")
+    return out
+
+
 @dataclasses.dataclass
 class StepOps:
     """Device work one or more allocator calls accumulated: applied by the
@@ -691,26 +778,8 @@ class PagePool:
     def check(self) -> None:
         """Assert the allocator invariants (test hook): the free list,
         cached LRU and mapped set partition the non-null pages, and
-        refcounts equal table reference counts."""
-        every = set(range(1, self.num_pages))
-        free = set(self.free)
-        cached = set(self.cached)
-        mapped = {int(p) for p in np.unique(self.table[self.table >= 0])}
-        assert len(free) == len(self.free), "duplicate page on free list"
-        assert 0 not in free | cached | mapped, "null page leaked"
-        assert free.isdisjoint(cached), free & cached
-        assert free.isdisjoint(mapped), free & mapped
-        assert cached.isdisjoint(mapped), cached & mapped
-        assert free | cached | mapped == every, \
-            ("lost pages", every - (free | cached | mapped))
-        want = np.zeros(self.num_pages, np.int64)
-        pids, counts = np.unique(self.table[self.table >= 0],
-                                 return_counts=True)
-        want[pids] = counts
-        assert (want == self.refcount).all(), \
-            ("refcount drift", want.tolist(), self.refcount.tolist())
-        for pid in cached:
-            assert pid in self.page_hash, f"cached page {pid} unregistered"
-        for digest, pid in self.prefix_map.items():
-            assert self.page_hash.get(pid) == digest, \
-                f"prefix map / page hash drift at page {pid}"
+        refcounts equal table reference counts. The invariants themselves
+        live in the module-level :func:`invariant_violations` so the fuzz
+        harness and the model checker share the exact same definition."""
+        bad = invariant_violations(self)
+        assert not bad, "; ".join(bad)

@@ -1,0 +1,187 @@
+"""repro.analysis.dataflow: the interprocedural scale-dataflow pass
+(SQ008) catches the cross-function unclamped divides the intraprocedural
+SQ002 cannot see, stays quiet when any path clamps, propagates through
+returns / call arguments / dict packing / closures, honors per-site
+suppressions, and runs clean on the committed tree (DESIGN.md §16)."""
+import textwrap
+from pathlib import Path
+
+from repro.analysis import dataflow
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src"
+
+
+def _analyze(code, path="mod.py"):
+    return dataflow.analyze_source(textwrap.dedent(code), path)
+
+
+def _codes(result):
+    return sorted(v.code for v in result.findings)
+
+
+# ------------------------------------------------ the SQ002 gap closes ----
+
+def test_cross_function_unclamped_divide_is_flagged():
+    """The mutant SQ002 misses: producer and divider live in different
+    functions, so no single function contains both the abs-max and the
+    divide."""
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+        def quantize(x):
+            s = make_scale(x)
+            return x / s
+    """)
+    assert _codes(r) == ["SQ008"]
+    assert "no ACT_SCALE_EPS clamp" in r.findings[0].message
+
+
+def test_intraprocedural_sq002_cases_not_duplicated():
+    """Same-function abs-max divides are SQ002's beat; the dataflow pass
+    still sees them (same lattice), which is fine — but the clamped form
+    must be quiet in both."""
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jnp.maximum(jnp.max(jnp.abs(x), axis=-1,
+                                       keepdims=True), 1e-6)
+
+        def quantize(x):
+            return x / make_scale(x)
+    """)
+    assert r.ok
+
+
+def test_clamped_at_use_site_is_quiet():
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+        def quantize(x, eps):
+            s = jnp.maximum(make_scale(x), eps)
+            return x / s
+    """)
+    assert r.ok
+
+
+def test_raw_scale_into_dividing_callee_param():
+    """The other direction: the raw scale is *passed into* a function
+    that divides by its parameter."""
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def apply_scale(x, s):
+            return x / s
+
+        def quantize(x):
+            s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+            return apply_scale(x, s)
+    """)
+    assert _codes(r) == ["SQ008"]
+    assert "apply_scale" in r.findings[0].message
+    assert "'s'" in r.findings[0].message
+
+
+def test_reciprocal_multiply_counts_as_divide():
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+        def quantize(x):
+            return x * jnp.reciprocal(make_scale(x))
+    """)
+    assert _codes(r) == ["SQ008"]
+
+
+def test_dict_pytree_packing_propagates():
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def pack(x):
+            return {"scale": jnp.max(jnp.abs(x)), "data": x}
+
+        def unpack_and_divide(x):
+            st = pack(x)
+            return x / st["scale"]
+    """)
+    assert _codes(r) == ["SQ008"]
+
+
+def test_closure_propagates():
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def outer(x):
+            s = jnp.max(jnp.abs(x))
+
+            def inner(y):
+                return y / s
+
+            return inner(x)
+    """)
+    assert _codes(r) == ["SQ008"]
+
+
+def test_stop_gradient_keeps_taint():
+    r = _analyze("""
+        import jax
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+
+        def quantize(x):
+            return x / make_scale(x)
+    """)
+    assert _codes(r) == ["SQ008"]
+
+
+def test_non_scale_divide_is_quiet():
+    r = _analyze("""
+        def mean(x, n):
+            return x / n
+    """)
+    assert r.ok
+
+
+# ------------------------------------------------------- suppressions ----
+
+def test_sq008_suppression_honored_with_reason():
+    r = _analyze("""
+        import jax.numpy as jnp
+
+        def make_scale(x):
+            return jnp.max(jnp.abs(x))
+
+        def quantize(x):
+            return x / make_scale(x)  # soniq-lint: disable=SQ008(padded rows impossible here)
+    """)
+    assert r.ok
+    assert [s.code for s in r.suppressed] == ["SQ008"]
+    assert r.suppressed[0].reason == "padded rows impossible here"
+
+
+def test_stale_sq008_suppression_becomes_sq007():
+    r = _analyze("""
+        def harmless(x, n):
+            return x / n  # soniq-lint: disable=SQ008(stale claim)
+    """)
+    assert _codes(r) == ["SQ007"]
+    assert "SQ008 does not fire" in r.findings[0].message
+
+
+# ----------------------------------------------------------- repo-wide ----
+
+def test_repo_src_tree_is_clean():
+    """The committed tree has no cross-function unclamped scale divides —
+    the same gate CI's static-analysis leg enforces."""
+    r = dataflow.analyze_paths([SRC_ROOT])
+    assert r.ok, "\n".join(v.format() for v in r.findings)

@@ -133,6 +133,96 @@ def test_sq002_trips_on_zero_eps():
     assert _codes(r) == ["SQ002"]
 
 
+def test_sq002_trips_on_reciprocal_multiply():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x):
+            inv = jnp.reciprocal(jnp.max(jnp.abs(x), axis=-1,
+                                         keepdims=True))
+            return x * inv
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_trips_on_one_over_scale():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x):
+            return x * (1.0 / jnp.abs(x).max(axis=-1, keepdims=True))
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_trips_on_lax_div():
+    r = _lint("""
+        import jax.numpy as jnp
+        from jax import lax
+        def quantize(x):
+            s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+            return lax.div(x, s)
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_trips_on_jnp_divide():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x):
+            return jnp.divide(x, jnp.max(jnp.abs(x)))
+    """)
+    assert _codes(r) == ["SQ002"]
+
+
+def test_sq002_quiet_on_clamped_reciprocal():
+    r = _lint("""
+        import jax.numpy as jnp
+        def quantize(x, eps):
+            inv = jnp.reciprocal(jnp.maximum(jnp.max(jnp.abs(x)), eps))
+            return x * inv
+    """)
+    assert r.ok
+
+
+# ------------------------------------------------------------- SQ007 ----
+# Stale suppressions: a disable=SQxxx(reason) whose hazard no longer
+# exists keeps swallowing the rule when it fires next for a new bug.
+
+def test_sq007_trips_on_stale_suppression():
+    r = _lint("""
+        def f(buf, x):
+            return buf.at[0].set(x)  # soniq-lint: disable=SQ001(stale claim)
+    """)
+    assert _codes(r) == ["SQ007"]
+    assert "SQ001" in r.violations[0].message
+
+
+def test_sq007_quiet_when_suppression_fires():
+    r = _lint("""
+        def f(buf, i, x):
+            return buf.at[i].set(x)  # soniq-lint: disable=SQ001(host ids)
+    """)
+    assert r.ok and [s.code for s in r.suppressed] == ["SQ001"]
+
+
+def test_sq007_only_judges_rules_that_ran():
+    # Restricting the run to SQ002 must not flag an unused SQ001
+    # suppression — that rule never executed, so staleness is unknown.
+    r = _lint("""
+        def f(buf, x):
+            return buf.at[0].set(x)  # soniq-lint: disable=SQ001(stale claim)
+    """, codes=["SQ002", "SQ007"])
+    assert r.ok
+
+
+def test_sq007_suppressible_itself():
+    r = _lint("""
+        def f(buf, x):
+            return buf.at[0].set(x)  # soniq-lint: disable=SQ001(kept), disable=SQ007(transitional)
+    """)
+    assert r.ok
+    assert "SQ007" in [s.code for s in r.suppressed]
+
+
 # ------------------------------------------------------------- SQ003 ----
 # Registry-bypass: calling repro.kernels.* directly skips backend
 # negotiation (and the interpret-mode gating CI relies on).
@@ -263,7 +353,8 @@ def test_syntax_error_reports_sq000():
 
 def test_rule_registry_complete():
     codes = [r.code for r in lint.all_rules()]
-    assert codes == ["SQ001", "SQ002", "SQ003", "SQ004", "SQ005", "SQ006"]
+    assert codes == ["SQ001", "SQ002", "SQ003", "SQ004", "SQ005", "SQ006",
+                     "SQ007"]
     assert all(r.rationale for r in lint.all_rules())
 
 
@@ -285,6 +376,24 @@ def test_cli_json_output(tmp_path, capsys):
     out = json.loads(capsys.readouterr().out)
     assert rc == 1 and not out["ok"]
     assert [v["code"] for v in out["violations"]] == ["SQ001"]
+
+
+def test_cli_sarif_output(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    f = tmp_path / "bad.py"
+    f.write_text("def f(c, i, x):\n    return c.at[i].set(x)\n")
+    sarif_file = tmp_path / "out.sarif"
+    rc = main([str(f), "--no-baseline", "--sarif", str(sarif_file)])
+    capsys.readouterr()
+    assert rc == 1
+    log = json.loads(sarif_file.read_text())
+    assert log["version"] == "2.1.0"
+    results = log["runs"][0]["results"]
+    assert [r["ruleId"] for r in results] == ["SQ001"]
+    loc = results[0]["locations"][0]["physicalLocation"]
+    assert loc["region"]["startLine"] == 2
+    rules = {r["id"] for r in log["runs"][0]["tool"]["driver"]["rules"]}
+    assert "SQ001" in rules
 
 
 def test_cli_write_baseline_roundtrip(tmp_path, capsys):

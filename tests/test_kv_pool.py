@@ -151,14 +151,9 @@ def _run_pool_program(seed, num_pages, page_size, pages_per_seq,
                 continue
             # At allocation time (before the step registers anything),
             # shared (refcount > 1) and registered pages must never be
-            # handed out as in-place write targets.
-            for pid in ops.wipes:
-                assert pool.refcount[pid] == 1
-                assert pid not in pool.page_hash
-            for _src, dst in ops.copies:
-                assert pool.refcount[dst] == 1
-                assert dst not in pool.page_hash
-            assert not (set(ops.poisons) & set(ops.wipes))
+            # handed out as in-place write targets (shared definition
+            # with PagePool.check() and the model checker).
+            assert kv_pool.step_ops_violations(pool, ops) == []
             fed = n_fed + width
             if fed <= pages_per_seq * page_size and rng.random() < 0.4:
                 # Speculative rollback: the verify pass rejected a random
